@@ -1,0 +1,222 @@
+"""Analytic FLOP/byte models used to correct XLA cost analysis.
+
+XLA's HloCostAnalysis counts a ``lax.scan`` body ONCE, not x trip-count.
+Three scan levels exist in this codebase:
+
+1. the LAYER scan (dense/moe/vlm/audio stacks) — corrected by lowering
+   unrolled L=2/L=4 cells and extrapolating linearly (launch/dryrun.py);
+2. the KV-BLOCK scan inside chunked attention — corrected here with
+   closed-form matmul counts (the lowered program executes every block,
+   masked or not — masking waste is part of the *executed* number and is
+   one of the §Perf findings);
+3. the TIME/CHUNK scans of the recurrent families (RG-LRU, mLSTM, sLSTM)
+   — corrected here analytically.
+
+``model_flops`` is the *useful* figure (6·N_active·D convention +
+mask-aware attention), used for the MODEL/HLO ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+from repro.models.common import ModelConfig
+from repro.models.registry import ShapeCell
+
+
+def _train_factor(cfg: ModelConfig) -> float:
+    """fwd(1) + bwd(2) + remat recompute (policy-dependent)."""
+    if cfg.remat_policy in ("nothing_saveable", "none"):
+        return 4.0
+    if cfg.remat_policy.startswith("dots"):
+        return 3.0
+    return 3.0
+
+
+def _pass_factor(cfg: ModelConfig, cell: ShapeCell) -> float:
+    return _train_factor(cfg) if cell.kind == "train" else 1.0
+
+
+# ---------------------------------------------------------------------------
+# Attention score/combine flops (the part living inside kv-block scans)
+# ---------------------------------------------------------------------------
+
+def _score_flops(b, s_q, s_kv, heads, hd, frac=1.0):
+    """qk^T + p·v matmuls: 2 x (2·B·Sq·Skv·H·hd) x live fraction."""
+    return 4.0 * b * s_q * s_kv * heads * hd * frac
+
+
+def attn_executed_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """Attention score flops the lowered program EXECUTES (chunked path
+    computes every block and masks), whole model, fwd x pass factor."""
+    b = cell.global_batch
+    s = cell.seq_len
+    h, hd = cfg.num_heads, cfg.hd
+    pf = _pass_factor(cfg, cell)
+    if cell.kind == "decode":
+        return 0.0   # decode attention is not scanned; HLO counts it
+    if cfg.family == "audio":
+        t = cfg.num_frames
+        enc = cfg.encoder_layers or cfg.num_layers
+        per_enc = _score_flops(b, t, t, h, hd)
+        per_dec = _score_flops(b, s, s, h, hd) + _score_flops(b, s, t, h, hd)
+        return (enc * per_enc + cfg.num_layers * per_dec) * pf
+    if cfg.family == "hybrid":
+        kinds = _rg_kinds(cfg)
+        n_attn = sum(1 for k in kinds if k == "attn")
+        return n_attn * _score_flops(b, s, s, h, hd) * pf
+    if cfg.family == "ssm":
+        return 0.0   # handled by mlstm/slstm corrections
+    return cfg.num_layers * _score_flops(b, s, s, h, hd) * pf
+
+
+def attn_useful_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """Mask-aware useful attention flops (causal half / local window)."""
+    b = cell.global_batch
+    s = cell.seq_len
+    h, hd = cfg.num_heads, cfg.hd
+    pf = 3.0 if cell.kind == "train" else 1.0   # useful: no remat recompute
+    if cell.kind == "decode":
+        kv = min(cfg.local_window, s) if (cfg.family == "hybrid") else s
+        if cfg.family == "ssm":
+            return 0.0
+        if cfg.family == "hybrid":
+            kinds = _rg_kinds(cfg)
+            n_attn = sum(1 for k in kinds if k == "attn")
+            return n_attn * _score_flops(b, 1, kv, h, hd)
+        layers = cfg.num_layers
+        extra = 0.0
+        if cfg.family == "audio":
+            extra = layers * _score_flops(b, 1, cfg.num_frames, h, hd)
+        return layers * _score_flops(b, 1, s, h, hd) + extra
+    if cfg.family == "audio":
+        t = cfg.num_frames
+        enc = cfg.encoder_layers or cfg.num_layers
+        per_enc = _score_flops(b, t, t, h, hd)
+        per_dec = _score_flops(b, s, s, h, hd, 0.5) + \
+            _score_flops(b, s, t, h, hd)
+        return (enc * per_enc + cfg.num_layers * per_dec) * pf
+    if cfg.family == "hybrid":
+        kinds = _rg_kinds(cfg)
+        n_attn = sum(1 for k in kinds if k == "attn")
+        w = min(cfg.local_window or s, s)
+        frac = min(1.0, w / s)  # local window live fraction (approx)
+        return n_attn * _score_flops(b, s, s, h, hd, frac) * pf
+    if cfg.family == "ssm":
+        return mlstm_flops(cfg, cell, useful=True) + slstm_flops(cfg, cell)
+    return cfg.num_layers * _score_flops(b, s, s, h, hd, 0.5) * pf
+
+
+def attn_executed_bytes(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """HBM traffic of the chunked-attention scan the HLO count misses:
+    per kv-block step the scan re-reads q and reads+writes the fp32
+    (m, l, acc) carry. This is the dominant *memory-term* pathology of
+    flash-in-XLA vs a fused Pallas kernel (carry lives in VMEM there)."""
+    if cell.kind == "decode" or cfg.family == "ssm":
+        return 0.0
+    b = cell.global_batch
+    s = cell.seq_len
+    h, hd = cfg.num_heads, cfg.hd
+    blk = cfg.attn_kv_block
+    pf = _pass_factor(cfg, cell)
+
+    def per_layer(s_q, s_kv):
+        nblk = max(1, s_kv // max(1, min(blk, s_kv)))
+        q_bytes = b * s_q * h * hd * 2
+        carry = b * s_q * h * hd * 4 + 2 * b * s_q * h * 4   # acc + m,l fp32
+        kv_bytes = b * s_kv * cfg.kv_heads_eff * hd * 2 * 2
+        return nblk * (q_bytes + 2 * carry) + kv_bytes
+
+    if cfg.family == "audio":
+        t = cfg.num_frames
+        enc = cfg.encoder_layers or cfg.num_layers
+        total = enc * per_layer(t, t) + \
+            cfg.num_layers * (per_layer(s, s) + per_layer(s, t))
+    elif cfg.family == "hybrid":
+        n_attn = sum(1 for k in _rg_kinds(cfg) if k == "attn")
+        total = n_attn * per_layer(s, s)
+    else:
+        total = cfg.num_layers * per_layer(s, s)
+    return total * pf
+
+
+# ---------------------------------------------------------------------------
+# Recurrent-family in-scan corrections
+# ---------------------------------------------------------------------------
+
+def _rg_kinds(cfg: ModelConfig):
+    pattern = cfg.block_pattern or ("rglru", "rglru", "attn")
+    return [pattern[i % len(pattern)] for i in range(cfg.num_layers)]
+
+
+def rglru_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """Elementwise recurrence ops inside the blocked time scan."""
+    if cfg.family != "hybrid" or cell.kind == "decode":
+        return 0.0
+    b, s = cell.global_batch, cell.seq_len
+    dr = cfg.d_rnn or cfg.d_model
+    n_rec = sum(1 for k in _rg_kinds(cfg) if k == "rglru")
+    # ~10 elementwise ops per element per associative-scan level (log2 256=8)
+    per_layer = 10.0 * b * s * dr * 8
+    return n_rec * per_layer * _pass_factor(cfg, cell)
+
+
+def mlstm_flops(cfg: ModelConfig, cell: ShapeCell, useful=False) -> float:
+    if cfg.family != "ssm" or cell.kind == "decode":
+        return 0.0
+    from repro.models.xlstm import d_inner, slstm_positions
+    b, s = cell.global_batch, cell.seq_len
+    di = d_inner(cfg)
+    h = cfg.num_heads
+    hd = di // h
+    L = min(cfg.mlstm_chunk, s)
+    nc = max(1, s // L)
+    n_m = cfg.num_layers - len(slstm_positions(cfg))
+    # per chunk: qk^T (2 L^2 hd), att.v (2 L^2 hd), kv update (2 L hd^2),
+    # h_inter (2 L hd^2)
+    per_chunk = b * h * (4.0 * L * L * hd + 4.0 * L * hd * hd)
+    pf = (3.0 if useful else _train_factor(cfg)) if cell.kind == "train" \
+        else 1.0
+    return n_m * nc * per_chunk * pf
+
+
+def slstm_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    if cfg.family != "ssm" or cell.kind == "decode":
+        return 0.0
+    from repro.models.xlstm import slstm_positions
+    b, s = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    n_s = len(slstm_positions(cfg))
+    # 4 recurrent block-diagonal matvecs per step: 4 x 2 x d x hd
+    per_layer = 8.0 * b * s * d * hd
+    return n_s * per_layer * _pass_factor(cfg, cell)
+
+
+def inner_scan_flop_correction(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """Everything the per-layer HLO numbers miss inside in-layer scans."""
+    blk = min(cfg.attn_kv_block, cell.seq_len)
+    nblk = max(1, cell.seq_len // max(1, blk))
+    frac = (nblk - 1) / nblk if nblk > 1 else 0.0
+    total = attn_executed_flops(cfg, cell) * frac
+    total += rglru_flops(cfg, cell)
+    # mlstm chunk scan: HLO saw one chunk of nc
+    ml = mlstm_flops(cfg, cell)
+    nc = max(1, cell.seq_len // max(1, min(cfg.mlstm_chunk, cell.seq_len)))
+    total += ml * (nc - 1) / nc if nc > 1 else 0.0
+    total += slstm_flops(cfg, cell)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Useful model flops (the MODEL_FLOPS convention)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell, params_active: int
+                ) -> float:
+    tokens = (cell.global_batch if cell.kind == "decode"
+              else cell.global_batch * cell.seq_len)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * params_active * tokens + attn_useful_flops(cfg, cell)

@@ -1,0 +1,56 @@
+"""Benchmark harness: one function per paper claim, printing
+``name,us_per_call,derived`` CSV rows, plus the roofline summary of the
+three hillclimbed cells (full tables live in EXPERIMENTS.md).
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import engine_bench
+
+    print("name,us_per_call,derived")
+    for fn in engine_bench.ALL:
+        try:
+            row = fn()
+            print(f"{row['name']},{row['us_per_call']:.1f},"
+                  f"\"{row['derived']}\"", flush=True)
+        except Exception:  # noqa: BLE001
+            print(f"{fn.__name__},ERROR,\"{traceback.format_exc()[-200:]}\"",
+                  flush=True)
+
+    # roofline summaries for the hillclimbed cells (read from dry-run JSONs)
+    try:
+        from benchmarks import roofline
+        cells = [
+            ("deepseek-67b", "train_4k", ["baseline", "zero3",
+                                          "zero3_full_remat", "zero3_ce"]),
+            ("grok-1-314b", "train_4k", ["baseline", "zero3", "zero3_af",
+                                         "tp_cf1"]),
+            ("deepseek-67b", "decode_32k", ["baseline", "serve_opt",
+                                            "serve_opt_2d", "serve_act"]),
+        ]
+        for arch, shape, variants in cells:
+            for var in variants:
+                r = roofline.analyse_cell(arch, shape, "single", var)
+                if r is None or r.get("skipped") or "error" in r:
+                    continue
+                derived = (f"compute={r['t_compute']*1e3:.0f}ms "
+                           f"memory={r['t_memory']*1e3:.0f}ms "
+                           f"collective={r['t_collective']*1e3:.0f}ms "
+                           f"dominant={r['dominant']} "
+                           f"mfu_bound={r['mfu_bound']*100:.0f}%")
+                print(f"roofline[{arch}|{shape}|{var}],"
+                      f"{max(r['t_compute'], r['t_memory'],
+                             r['t_collective'])*1e6:.0f},\"{derived}\"",
+                      flush=True)
+    except Exception:  # noqa: BLE001
+        print(f"roofline,ERROR,\"{traceback.format_exc()[-200:]}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""End-to-end driver: a PretrainWorkChain training a language model under
+the engine, with checkpoint/restart, NaN error handling and provenance.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~10M model
+    PYTHONPATH=src python examples/train_lm.py --preset 110m   # full demo
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+The chain trains in CHUNKS: every outline step runs `chunk_steps` optimizer
+steps, then checkpoints (model state via the sharded tensor checkpointer,
+engine state via the process checkpoint, data cursor inside the context) —
+kill the process at any point and rerun with --resume <pk> to continue from
+the last chunk boundary. A NaN loss aborts the chunk with exit code 310 and
+the chain restarts from the last good checkpoint with a lower LR.
+"""
+
+import argparse
+import math
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import Dict, Float, Int, WorkChain, while_
+from repro.engine.runner import Runner, set_default_runner
+from repro.models.registry import build
+from repro.provenance import configure_store
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, TokenStream
+from repro.training.optim import OptimConfig
+from repro.training.train_step import (
+    TrainConfig, init_train_state, make_train_step,
+)
+
+PRESETS = {
+    "tiny": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                 d_ff=704, vocab_size=8192),
+    "110m": {},   # the aiida-demo-110m config as-is
+}
+
+
+class PretrainWorkChain(WorkChain):
+    """Trains in checkpointed chunks; recovers from NaN by lowering LR."""
+
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("preset", valid_type=Dict)
+        spec.input("total_steps", valid_type=Int, default=Int(60))
+        spec.input("chunk_steps", valid_type=Int, default=Int(20))
+        spec.input("lr", valid_type=Float, default=Float(3e-3))
+        spec.input("ckpt_dir", valid_type=Dict, default=Dict({"dir": ""}),
+                   required=False)
+        spec.output("final_metrics", valid_type=Dict)
+        spec.exit_code(310, "ERROR_NAN_LOSS", "loss diverged to NaN")
+        spec.exit_code(320, "ERROR_NO_PROGRESS",
+                       "loss failed to improve across restarts")
+        spec.outline(
+            cls.setup,
+            while_(cls.not_done)(
+                cls.train_chunk,
+            ),
+            cls.finalize,
+        )
+
+    # -- helpers (jit cache lives on the instance, not the checkpoint) -----
+    def _ensure_runtime(self):
+        if hasattr(self, "_step_fn"):
+            return
+        preset = dict(self.inputs["preset"].value)
+        cfg = get_config("aiida-demo-110m").replace(**preset)
+        self._bundle = build(cfg)
+        ocfg = OptimConfig(lr=self.ctx.lr,
+                           warmup_steps=10,
+                           total_steps=int(self.inputs["total_steps"].value))
+        tcfg = TrainConfig(optim=ocfg)
+        self._step_fn = jax.jit(make_train_step(self._bundle, tcfg),
+                                donate_argnums=(0,))
+        self._data = TokenStream(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=self.ctx.seq_len,
+            batch_size=self.ctx.batch, seed=17))
+        if self.ctx.data_cursor is not None:
+            self._data.load_state_dict(self.ctx.data_cursor)
+        ckdir = self.ctx.ckpt_dir
+        step = ckpt.latest_step(ckdir)
+        if step is not None:
+            target = init_train_state(self._bundle, tcfg,
+                                      jax.random.PRNGKey(0))
+            self._train_state = ckpt.restore_checkpoint(ckdir, target=target)
+            self.report("restored model checkpoint at step %d", step)
+        else:
+            self._train_state = init_train_state(self._bundle, tcfg,
+                                           jax.random.PRNGKey(0))
+        self._tcfg = tcfg
+
+    # -- outline ------------------------------------------------------------
+    def setup(self):
+        self.ctx.step = 0
+        self.ctx.losses = []
+        self.ctx.lr = float(self.inputs["lr"].value)
+        self.ctx.nan_restarts = 0
+        self.ctx.data_cursor = None
+        self.ctx.seq_len = 128
+        self.ctx.batch = 4
+        self.ctx.ckpt_dir = (self.inputs["ckpt_dir"].value.get("dir")
+                             or f"examples_out/ckpt_{self.pk}")
+        self.report("training starts: %d steps in chunks of %d",
+                    self.inputs["total_steps"].value,
+                    self.inputs["chunk_steps"].value)
+
+    def not_done(self):
+        return self.ctx.step < int(self.inputs["total_steps"].value)
+
+    def train_chunk(self):
+        self._ensure_runtime()
+        n = min(int(self.inputs["chunk_steps"].value),
+                int(self.inputs["total_steps"].value) - self.ctx.step)
+        t0 = time.time()
+        for _ in range(n):
+            batch = self._data.next_batch()
+            self._train_state, metrics = self._step_fn(
+                self._train_state, {k: jnp.asarray(v) for k, v in batch.items()})
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        self.ctx.step += n
+
+        if math.isnan(loss) or math.isinf(loss):
+            self.ctx.step -= n     # rewind: the chunk did not commit
+            self.ctx.nan_restarts += 1
+            if self.ctx.nan_restarts > 3:
+                return self.exit_codes.ERROR_NO_PROGRESS
+            self.ctx.lr /= 10.0
+            del self._step_fn      # rebuild with the lower LR
+            self.report("NaN at step %d! restarting chunk from last "
+                        "checkpoint with lr=%.2e", self.ctx.step, self.ctx.lr)
+            return None            # chunk re-runs from last good state
+
+        # commit: loss history, data cursor, model checkpoint — this is the
+        # restart point for both engine-level and tensor-level recovery
+        self.ctx.losses.append(loss)
+        self.ctx.data_cursor = self._data.state_dict()
+        ckpt.save_checkpoint(self.ctx.ckpt_dir, self.ctx.step, self._train_state)
+        self.report("step %d: loss=%.4f grad_norm=%.2f (%.1fs, %.1f tok/s)",
+                    self.ctx.step, loss, float(metrics["grad_norm"]), dt,
+                    n * self.ctx.batch * self.ctx.seq_len / dt)
+
+    def finalize(self):
+        self.report("done: %d steps, final loss %.4f",
+                    self.ctx.step, self.ctx.losses[-1])
+        self.out("final_metrics", Dict({
+            "losses": self.ctx.losses,
+            "final_loss": self.ctx.losses[-1],
+            "steps": self.ctx.step,
+            "nan_restarts": self.ctx.nan_restarts,
+        }))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--chunk", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--resume", type=int, default=None,
+                    help="pk of an interrupted chain to resume")
+    args = ap.parse_args()
+
+    store = configure_store("examples_out/train_lm.db")
+    runner = Runner(store=store)
+    set_default_runner(runner)
+
+    if args.resume is not None:
+        handle = runner.resume_from_checkpoint(args.resume)
+        if handle is None:
+            print(f"no checkpoint for pk={args.resume}")
+            return
+        runner.loop.run_until_complete(handle.process.wait_done())
+        proc = handle.process
+    else:
+        outputs, proc = runner.run(PretrainWorkChain, {
+            "preset": Dict(PRESETS[args.preset]),
+            "total_steps": Int(args.steps),
+            "chunk_steps": Int(args.chunk),
+            "lr": Float(args.lr),
+        })
+
+    print(f"\nstate={proc.state.value} exit={proc.exit_code}")
+    for log in store.get_logs(proc.pk):
+        print("  [report]", log["message"])
+    if "final_metrics" in proc.outputs:
+        m = proc.outputs["final_metrics"].value
+        print(f"loss: {m['losses'][0]:.3f} -> {m['final_loss']:.3f} "
+              f"over {m['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.calcjobs.calcjob import CalcJob  # noqa: F401
+from repro.calcjobs.scheduler import (  # noqa: F401
+    JobState, SimScheduler, SimulatedCluster, SlurmScheduler,
+)
+from repro.calcjobs.tpujob import TPUTrainJob  # noqa: F401

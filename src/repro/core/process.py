@@ -1,0 +1,414 @@
+"""The Process class (paper §II.A, §III.B).
+
+Any entity the engine can run. Combines:
+
+* the declarative ProcessSpec (ports, exit codes),
+* the extended state machine (CREATED → RUNNING → WAITING → … fig. 6),
+* provenance integration (a process node is created on instantiation,
+  inputs are linked on creation, outputs on termination),
+* checkpoint persistence at every state transition (fig. 7),
+* external control (pause / play / kill) via interruptible waits,
+* broadcast of state changes so parents can resume on child termination.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import contextvars
+import traceback
+from typing import Any, Mapping
+
+from repro.core.datatypes import DataValue, to_data_value
+from repro.core.exit_code import ExitCode
+from repro.core.ports import PortNamespace
+from repro.core.process_spec import ProcessSpec
+from repro.core.statemachine import ProcessState, StateMachine
+from repro.provenance.store import LinkType, NodeType
+
+# The process currently executing in this task — used to attach CALL links
+# for synchronously-nested process functions (paper fig. 2).
+CURRENT_PROCESS: contextvars.ContextVar["Process | None"] = \
+    contextvars.ContextVar("CURRENT_PROCESS", default=None)
+
+_INPUT_LINK = {
+    NodeType.CALC_FUNCTION: LinkType.INPUT_CALC,
+    NodeType.CALC_JOB: LinkType.INPUT_CALC,
+    NodeType.WORK_FUNCTION: LinkType.INPUT_WORK,
+    NodeType.WORK_CHAIN: LinkType.INPUT_WORK,
+    NodeType.PROCESS: LinkType.INPUT_WORK,
+}
+_OUTPUT_LINK = {
+    NodeType.CALC_FUNCTION: LinkType.CREATE,
+    NodeType.CALC_JOB: LinkType.CREATE,
+    NodeType.WORK_FUNCTION: LinkType.RETURN,
+    NodeType.WORK_CHAIN: LinkType.RETURN,
+    NodeType.PROCESS: LinkType.RETURN,
+}
+_CALL_LINK = {
+    NodeType.CALC_FUNCTION: LinkType.CALL_CALC,
+    NodeType.CALC_JOB: LinkType.CALL_CALC,
+    NodeType.WORK_FUNCTION: LinkType.CALL_WORK,
+    NodeType.WORK_CHAIN: LinkType.CALL_WORK,
+    NodeType.PROCESS: LinkType.CALL_WORK,
+}
+
+
+class ProcessKilled(Exception):
+    pass
+
+
+class Process(StateMachine):
+    NODE_TYPE: NodeType = NodeType.PROCESS
+    _spec_cache: dict[type, ProcessSpec] = {}
+
+    # -- specification ---------------------------------------------------------
+    @classmethod
+    def define(cls, spec: ProcessSpec) -> None:
+        """Subclasses extend; must call super().define(spec)."""
+
+    @classmethod
+    def spec(cls) -> ProcessSpec:
+        if cls not in Process._spec_cache:
+            spec = ProcessSpec()
+            cls.define(spec)
+            Process._spec_cache[cls] = spec
+        return Process._spec_cache[cls]
+
+    # -- construction ------------------------------------------------------------
+    def __init__(self, inputs: Mapping[str, Any] | None = None, *,
+                 runner=None, parent_pk: int | None = None):
+        super().__init__()
+        from repro.engine.runner import default_runner
+        self.runner = runner or default_runner()
+        self.store = self.runner.store
+        spec = self.spec()
+
+        merged = _merge_defaults(spec.inputs, dict(inputs or {}))
+        err = spec.validate_inputs(merged)
+        if err is not None:
+            raise ValueError(f"invalid inputs for {type(self).__name__}: {err}")
+        self.inputs = merged
+        self.metadata = dict(merged.get("metadata") or {})
+
+        self.outputs: dict[str, Any] = {}
+        self._exit_code: ExitCode | None = None
+        self._killed_msg: str | None = None
+        self._done = asyncio.Event()
+        self._play = asyncio.Event()
+        self._play.set()
+        self._interrupts: list[asyncio.Future] = []
+        self._pause_requested = False
+
+        # provenance node + input links
+        self.pk = self.store.create_process_node(
+            self.NODE_TYPE, process_type=type(self).__name__,
+            label=self.metadata.get("label", ""),
+            description=self.metadata.get("description", ""))
+        self._link_inputs(spec.inputs, merged, prefix="")
+
+        parent = CURRENT_PROCESS.get()
+        if parent_pk is None and parent is not None:
+            parent_pk = parent.pk
+        if parent_pk is not None:
+            self.store.add_link(parent_pk, self.pk,
+                                _CALL_LINK[self.NODE_TYPE],
+                                f"CALL_{self.pk}")
+        self.parent_pk = parent_pk
+        # initial checkpoint: a freshly-created process can be shipped to a
+        # daemon worker (task queue carries only the pk; paper §III.C.a)
+        try:
+            self.store.save_checkpoint(self.pk, self.get_checkpoint())
+        except Exception:  # noqa: BLE001
+            pass
+
+    def _link_inputs(self, ns: PortNamespace, values: Mapping[str, Any],
+                     prefix: str) -> None:
+        link_type = _INPUT_LINK[self.NODE_TYPE]
+        for key, value in values.items():
+            port = ns.get(key)
+            label = f"{prefix}{key}"
+            if port is not None and port.non_db:
+                continue
+            if isinstance(port, PortNamespace) and isinstance(value, Mapping):
+                self._link_inputs(port, value, prefix=f"{label}__")
+                continue
+            if isinstance(value, DataValue):
+                self.store.store_data(value)
+                self.store.add_link(value.pk, self.pk, link_type, label)
+            elif isinstance(value, Mapping) and (
+                    port is None or getattr(port, "dynamic", False)):
+                for k2, v2 in value.items():
+                    if isinstance(v2, DataValue):
+                        self.store.store_data(v2)
+                        self.store.add_link(v2.pk, self.pk, link_type,
+                                            f"{label}__{k2}")
+
+    # -- identity ------------------------------------------------------------------
+    @property
+    def pid(self) -> int:
+        return self.pk
+
+    @property
+    def exit_code(self) -> ExitCode | None:
+        return self._exit_code
+
+    @property
+    def exit_codes(self):
+        return self.spec().exit_codes
+
+    @property
+    def is_finished_ok(self) -> bool:
+        return (self.state is ProcessState.FINISHED and
+                self._exit_code is not None and
+                self._exit_code.is_finished_ok)
+
+    # -- reporting (paper §II.B.3.b) -------------------------------------------------
+    def report(self, msg: str, *args) -> None:
+        message = msg % args if args else msg
+        self.store.add_log(self.pk, "REPORT", message)
+        self.runner.logger.info("[%s|%d] %s", type(self).__name__, self.pk,
+                                message)
+
+    # -- outputs (paper §II.B.3.e) ------------------------------------------------------
+    def out(self, label: str, value: Any) -> None:
+        """Record an output in memory; committed at step/termination."""
+        self.outputs[label] = value
+
+    def _commit_outputs(self) -> str | None:
+        """Validate + store outputs, link them. Returns error or None."""
+        err = self.spec().validate_outputs(self.outputs)
+        if err is not None:
+            return err
+        link_type = _OUTPUT_LINK[self.NODE_TYPE]
+        for label, value in self.outputs.items():
+            if isinstance(value, Mapping) and not isinstance(value, DataValue):
+                for k2, v2 in value.items():
+                    dv = to_data_value(v2)
+                    self.store.store_data(dv)
+                    self.store.add_link(self.pk, dv.pk, link_type,
+                                        f"{label}__{k2}")
+                continue
+            dv = to_data_value(value)
+            self.store.store_data(dv)
+            self.store.add_link(self.pk, dv.pk, link_type, label)
+        return None
+
+    # -- state machine hooks -------------------------------------------------------------
+    def on_entered(self, from_state: ProcessState) -> None:
+        state = self.state
+        attrs = {"paused": state is ProcessState.PAUSED}
+        self.store.update_process(
+            self.pk, state=state.value,
+            exit_status=(self._exit_code.status if self._exit_code else None),
+            exit_message=(self._exit_code.message if self._exit_code else None),
+            attributes=attrs)
+        if not state.is_terminal:
+            try:
+                self.store.save_checkpoint(self.pk, self.get_checkpoint())
+            except Exception:  # noqa: BLE001 — checkpointing must not kill
+                self.runner.logger.exception("checkpoint failed for %d", self.pk)
+        else:
+            self.store.delete_checkpoint(self.pk)
+            self._done.set()
+        comm = getattr(self.runner, "communicator", None)
+        if comm is not None:
+            comm.broadcast_send(
+                subject=f"state_changed.{from_state.value}.{state.value}",
+                sender=self.pk,
+                body={"state": state.value,
+                      "exit_status": (self._exit_code.status
+                                      if self._exit_code else None)})
+
+    # -- checkpointing (paper §III.B.1, fig. 7) ---------------------------------------------
+    def get_checkpoint(self) -> dict:
+        """Serialize enough state to recreate this process ('out_state')."""
+        return {
+            "process_class": f"{type(self).__module__}:{type(self).__qualname__}",
+            "pk": self.pk,
+            "state": self.state.value,
+            "inputs": _serialize_inputs(self.spec().inputs, self.inputs),
+            "parent_pk": self.parent_pk,
+            "extras": self.checkpoint_extras(),
+        }
+
+    def checkpoint_extras(self) -> dict:
+        """Subclass hook (workchain ctx, calcjob stage, …)."""
+        return {}
+
+    def load_checkpoint_extras(self, extras: dict) -> None:  # noqa: B027
+        pass
+
+    @classmethod
+    def recreate_from_checkpoint(cls, checkpoint: dict, runner=None
+                                 ) -> "Process":
+        import importlib
+
+        mod_name, _, qual = checkpoint["process_class"].partition(":")
+        mod = importlib.import_module(mod_name)
+        klass = mod
+        for part in qual.split("."):
+            klass = getattr(klass, part)
+        self = object.__new__(klass)  # bypass __init__ node creation
+        StateMachine.__init__(self)
+        from repro.engine.runner import default_runner
+        self.runner = runner or default_runner()
+        self.store = self.runner.store
+        self.inputs = _deserialize_inputs(checkpoint["inputs"])
+        self.metadata = dict(self.inputs.get("metadata") or {})
+        self.outputs = {}
+        self._exit_code = None
+        self._killed_msg = None
+        self._done = asyncio.Event()
+        self._play = asyncio.Event()
+        self._play.set()
+        self._interrupts = []
+        self._pause_requested = False
+        self.pk = checkpoint["pk"]
+        self.parent_pk = checkpoint.get("parent_pk")
+        self.load_checkpoint_extras(checkpoint.get("extras", {}))
+        return self
+
+    # -- external control (paper §III.C RPC) ---------------------------------------------------
+    def pause(self) -> None:
+        self._pause_requested = True
+        self._play.clear()
+
+    def play(self) -> None:
+        self._pause_requested = False
+        if self.state is ProcessState.PAUSED:
+            self.resume_from_pause()
+        self._play.set()
+
+    def kill(self, msg: str = "killed by user") -> None:
+        if self.is_terminated:
+            return
+        self._killed_msg = msg
+        for fut in list(self._interrupts):
+            if not fut.done():
+                fut.set_exception(ProcessKilled(msg))
+        self._play.set()
+
+    async def _pause_point(self) -> None:
+        """Honour pause requests between steps; blocks while paused."""
+        if self._killed_msg is not None:
+            raise ProcessKilled(self._killed_msg)
+        if self._pause_requested and not self.state.is_terminal:
+            self.transition_to(ProcessState.PAUSED)
+            await self._play.wait()
+            if self._killed_msg is not None:
+                raise ProcessKilled(self._killed_msg)
+            # resume_from_pause() happened in play()
+
+    async def interruptible(self, coro_or_future):
+        """Await something, but let kill() break in."""
+        loop = asyncio.get_running_loop()
+        interrupt = loop.create_future()
+        self._interrupts.append(interrupt)
+        try:
+            task = asyncio.ensure_future(coro_or_future)
+            done, _ = await asyncio.wait(
+                {task, interrupt}, return_when=asyncio.FIRST_COMPLETED)
+            if interrupt in done:
+                task.cancel()
+                interrupt.result()  # raises ProcessKilled
+            return task.result()
+        finally:
+            self._interrupts.remove(interrupt)
+            if not interrupt.done():
+                interrupt.cancel()
+
+    # -- execution driver -----------------------------------------------------------------------
+    async def run(self) -> ExitCode | int | None:
+        """Subclasses implement the body."""
+        raise NotImplementedError
+
+    async def step_until_terminated(self) -> ExitCode:
+        token = CURRENT_PROCESS.set(self)
+        try:
+            await self._pause_point()
+            self.transition_to(ProcessState.RUNNING)
+            result = await self.run()
+            exit_code = _interpret_result(result)
+            if exit_code.is_finished_ok:
+                err = self._commit_outputs()
+                if err is not None:
+                    exit_code = ExitCode(
+                        11, f"output validation failed: {err}",
+                        "ERROR_INVALID_OUTPUTS")
+            self._exit_code = exit_code
+            if not self.is_terminated:
+                self.transition_to(ProcessState.FINISHED)
+        except ProcessKilled as exc:
+            self._exit_code = ExitCode(998, str(exc), "KILLED")
+            if not self.is_terminated:
+                self.transition_to(ProcessState.KILLED)
+        except Exception:  # noqa: BLE001 → EXCEPTED, never propagate
+            tb = traceback.format_exc()
+            self.store.add_log(self.pk, "ERROR", tb)
+            self._exit_code = ExitCode(999, "process excepted", "EXCEPTED")
+            if not self.is_terminated:
+                self.transition_to(ProcessState.EXCEPTED)
+        finally:
+            CURRENT_PROCESS.reset(token)
+        return self._exit_code
+
+    async def wait_done(self) -> None:
+        await self._done.wait()
+
+
+def _interpret_result(result: Any) -> ExitCode:
+    if result is None:
+        return ExitCode(0, "", "SUCCESS")
+    if isinstance(result, ExitCode):
+        return result
+    if isinstance(result, int):
+        if result < 0:
+            raise ValueError("exit status must be non-negative")
+        return ExitCode(result, "", "")
+    raise TypeError(f"process returned {type(result).__name__}; expected "
+                    "None, int or ExitCode")
+
+
+def _merge_defaults(ns: PortNamespace, values: dict[str, Any]) -> dict[str, Any]:
+    out = dict(values)
+    for name, port in ns.items():
+        if isinstance(port, PortNamespace):
+            sub = out.get(name)
+            merged = _merge_defaults(port, dict(sub) if sub else {})
+            if merged:
+                out[name] = merged
+        elif name not in out and port.has_default:
+            out[name] = port.default
+    return out
+
+
+def _serialize_inputs(ns: PortNamespace, values: Mapping[str, Any]) -> dict:
+    out: dict[str, Any] = {}
+    for key, value in values.items():
+        port = ns.get(key) if ns is not None else None
+        if isinstance(value, DataValue):
+            out[key] = {"__data__": value.to_payload(), "pk": value.pk}
+        elif isinstance(value, Mapping):
+            sub_ns = port if isinstance(port, PortNamespace) else None
+            out[key] = {"__ns__": _serialize_inputs(sub_ns, value)}
+        elif isinstance(value, (str, int, float, bool, type(None))):
+            out[key] = {"__raw__": value}
+        else:
+            out[key] = {"__repr__": repr(value)}
+    return out
+
+
+def _deserialize_inputs(payload: dict) -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    for key, entry in payload.items():
+        if "__data__" in entry:
+            dv = DataValue.from_payload(entry["__data__"])
+            dv.pk = entry.get("pk")
+            out[key] = dv
+        elif "__ns__" in entry:
+            out[key] = _deserialize_inputs(entry["__ns__"])
+        elif "__raw__" in entry:
+            out[key] = entry["__raw__"]
+        else:
+            out[key] = entry.get("__repr__")
+    return out

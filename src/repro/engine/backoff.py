@@ -1,0 +1,54 @@
+"""Exponential-back-off-retry (paper §II.B.4.a).
+
+Wraps any transport task in a coroutine that catches exceptions and
+reschedules the operation with doubling intervals. After ``max_attempts``
+the wrapper raises ``TransportTaskExhausted`` — the owning process then
+PAUSES (never excepts), leaving the user free to fix the environment and
+``play`` it (the paper's robustness contract)."""
+
+from __future__ import annotations
+
+import asyncio
+import logging
+from typing import Awaitable, Callable
+
+logger = logging.getLogger("repro.engine.backoff")
+
+
+class TransportTaskExhausted(RuntimeError):
+    def __init__(self, name: str, attempts: int, last: BaseException):
+        super().__init__(
+            f"transport task {name!r} failed {attempts} times; last error: "
+            f"{last!r}")
+        self.name = name
+        self.attempts = attempts
+        self.last = last
+
+
+async def exponential_backoff_retry(
+        fn: Callable[[], Awaitable],
+        *, initial_interval: float = 0.2,
+        max_attempts: int = 5,
+        name: str = "transport-task",
+        non_retryable: tuple[type[BaseException], ...] = (),
+        sleeper: Callable[[float], Awaitable] | None = None):
+    """Run ``fn`` with exponential backoff: waits double per retry."""
+    sleep = sleeper or asyncio.sleep
+    interval = initial_interval
+    last: BaseException | None = None
+    for attempt in range(1, max_attempts + 1):
+        try:
+            return await fn()
+        except non_retryable:
+            raise
+        except asyncio.CancelledError:
+            raise
+        except Exception as exc:  # noqa: BLE001 — that's the point
+            last = exc
+            logger.warning("%s failed (attempt %d/%d): %r", name, attempt,
+                           max_attempts, exc)
+            if attempt == max_attempts:
+                break
+            await sleep(interval)
+            interval *= 2.0
+    raise TransportTaskExhausted(name, max_attempts, last)

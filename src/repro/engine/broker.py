@@ -1,0 +1,408 @@
+"""Durable cross-process message broker (the RabbitMQ role, paper §III.C).
+
+A small asyncio TCP server backed by sqlite gives the three messaging
+patterns with RabbitMQ-faithful guarantees:
+
+* **task queues** — persistent messages (survive broker restarts), explicit
+  acks, per-consumer heartbeats: a consumer that misses ``2 × heartbeat``
+  is presumed dead and its un-acked tasks are requeued (paper: "upon
+  missing two consecutive responses, RabbitMQ assumes the worker to be
+  dead and triggers the rescheduling mechanism").
+* **RPC** — request/response routed by subscriber identifier.
+* **broadcast** — fan-out to all connected clients.
+
+Protocol: newline-delimited JSON over TCP (loopback). This is deliberately
+boring; the durability lives in sqlite (WAL), the liveness in heartbeats.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import itertools
+import json
+import logging
+import os
+import sqlite3
+import time
+import uuid
+from typing import Any, Awaitable, Callable
+
+logger = logging.getLogger("repro.engine.broker")
+
+_TASKS_SCHEMA = """
+CREATE TABLE IF NOT EXISTS tasks (
+    id INTEGER PRIMARY KEY AUTOINCREMENT,
+    queue TEXT NOT NULL,
+    payload TEXT NOT NULL,
+    state TEXT NOT NULL DEFAULT 'ready',   -- ready | inflight | done
+    consumer TEXT,
+    delivered_at REAL,
+    created_at REAL NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_tasks_queue ON tasks(queue, state);
+"""
+
+
+class BrokerServer:
+    """The broker daemon. One per deployment (like one RabbitMQ service)."""
+
+    def __init__(self, db_path: str, host: str = "127.0.0.1", port: int = 0,
+                 heartbeat: float = 5.0):
+        self.db_path = db_path
+        self.host = host
+        self.port = port
+        self.heartbeat = heartbeat
+        self._server: asyncio.AbstractServer | None = None
+        self._clients: dict[str, asyncio.StreamWriter] = {}
+        self._consumers: dict[str, set[str]] = {}      # queue -> client ids
+        self._rpc: dict[str, str] = {}                 # identifier -> client id
+        self._last_beat: dict[str, float] = {}
+        self._pending_rpc: dict[str, tuple[str, Any]] = {}
+        self._conn = None
+
+    # -- storage ------------------------------------------------------------
+    def conn(self) -> sqlite3.Connection:
+        if self._conn is None:
+            os.makedirs(os.path.dirname(os.path.abspath(self.db_path)),
+                        exist_ok=True)
+            self._conn = sqlite3.connect(self.db_path)
+            self._conn.row_factory = sqlite3.Row
+            self._conn.execute("PRAGMA journal_mode=WAL")
+            self._conn.executescript(_TASKS_SCHEMA)
+            self._conn.commit()
+        return self._conn
+
+    # -- lifecycle -----------------------------------------------------------
+    async def start(self) -> tuple[str, int]:
+        self._server = await asyncio.start_server(self._on_client, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        asyncio.ensure_future(self._reaper())
+        logger.info("broker listening on %s:%d", self.host, self.port)
+        return self.host, self.port
+
+    async def stop(self) -> None:
+        if self._server:
+            self._server.close()
+            await self._server.wait_closed()
+
+    # -- client handling ---------------------------------------------------------
+    async def _on_client(self, reader: asyncio.StreamReader,
+                         writer: asyncio.StreamWriter) -> None:
+        cid = str(uuid.uuid4())
+        self._clients[cid] = writer
+        self._last_beat[cid] = time.monotonic()
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                try:
+                    msg = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                await self._handle(cid, msg)
+        except (ConnectionResetError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            self._drop_client(cid)
+
+    def _drop_client(self, cid: str) -> None:
+        self._clients.pop(cid, None)
+        self._last_beat.pop(cid, None)
+        for consumers in self._consumers.values():
+            consumers.discard(cid)
+        for ident in [k for k, v in self._rpc.items() if v == cid]:
+            del self._rpc[ident]
+        # requeue this consumer's inflight tasks immediately...
+        self.conn().execute(
+            "UPDATE tasks SET state='ready', consumer=NULL WHERE "
+            "state='inflight' AND consumer=?", (cid,))
+        self.conn().commit()
+        # ...and push them to surviving/new consumers right away
+        for queue in list(self._consumers):
+            self._deliver(queue)
+
+    def _send(self, cid: str, msg: dict) -> None:
+        writer = self._clients.get(cid)
+        if writer is None:
+            return
+        try:
+            writer.write(json.dumps(msg).encode() + b"\n")
+        except Exception:  # noqa: BLE001
+            self._drop_client(cid)
+
+    # -- message dispatch ------------------------------------------------------------
+    async def _handle(self, cid: str, msg: dict) -> None:
+        kind = msg.get("kind")
+        if kind == "heartbeat":
+            self._last_beat[cid] = time.monotonic()
+        elif kind == "task_send":
+            self.conn().execute(
+                "INSERT INTO tasks (queue, payload, created_at)"
+                " VALUES (?,?,?)",
+                (msg["queue"], json.dumps(msg["payload"]), time.time()))
+            self.conn().commit()
+            self._deliver(msg["queue"])
+        elif kind == "consume":
+            self._consumers.setdefault(msg["queue"], set()).add(cid)
+            self._deliver(msg["queue"])
+        elif kind == "ack":
+            self.conn().execute(
+                "UPDATE tasks SET state='done' WHERE id=?", (msg["task_id"],))
+            self.conn().commit()
+            # deliver further work to this consumer
+            for queue, members in self._consumers.items():
+                if cid in members:
+                    self._deliver(queue)
+        elif kind == "nack":
+            self.conn().execute(
+                "UPDATE tasks SET state='ready', consumer=NULL WHERE id=?",
+                (msg["task_id"],))
+            self.conn().commit()
+            self._deliver(msg["queue"])
+        elif kind == "rpc_register":
+            self._rpc[msg["identifier"]] = cid
+        elif kind == "rpc_send":
+            target = self._rpc.get(msg["identifier"])
+            if target is None:
+                self._send(cid, {"kind": "rpc_reply", "rid": msg["rid"],
+                                 "error": f"no subscriber "
+                                          f"{msg['identifier']!r}"})
+            else:
+                self._pending_rpc[msg["rid"]] = (cid, None)
+                self._send(target, {"kind": "rpc_request", "rid": msg["rid"],
+                                    "identifier": msg["identifier"],
+                                    "msg": msg["msg"]})
+        elif kind == "rpc_reply":
+            origin = self._pending_rpc.pop(msg["rid"], None)
+            if origin is not None:
+                self._send(origin[0], msg)
+        elif kind == "broadcast":
+            for other in list(self._clients):
+                self._send(other, {"kind": "broadcast",
+                                   "subject": msg["subject"],
+                                   "sender": msg.get("sender"),
+                                   "body": msg.get("body", {})})
+
+    # -- delivery ---------------------------------------------------------------------
+    def _deliver(self, queue: str) -> None:
+        consumers = [c for c in self._consumers.get(queue, set())
+                     if c in self._clients]
+        if not consumers:
+            return
+        # round-robin ready tasks to consumers with capacity (prefetch=1
+        # per delivery round, like a fair RabbitMQ dispatch)
+        rows = self.conn().execute(
+            "SELECT id, payload FROM tasks WHERE queue=? AND state='ready'"
+            " ORDER BY id", (queue,)).fetchall()
+        inflight = {
+            r["consumer"]: r["c"] for r in self.conn().execute(
+                "SELECT consumer, COUNT(*) c FROM tasks WHERE queue=? AND"
+                " state='inflight' GROUP BY consumer", (queue,))}
+        ring = itertools.cycle(consumers)
+        for row in rows:
+            target = None
+            for _ in range(len(consumers)):
+                cand = next(ring)
+                if inflight.get(cand, 0) < 1:
+                    target = cand
+                    break
+            if target is None:
+                break
+            self.conn().execute(
+                "UPDATE tasks SET state='inflight', consumer=?, delivered_at=?"
+                " WHERE id=?", (target, time.time(), row["id"]))
+            inflight[target] = inflight.get(target, 0) + 1
+            self._send(target, {"kind": "task", "queue": queue,
+                                "task_id": row["id"],
+                                "payload": json.loads(row["payload"])})
+        self.conn().commit()
+
+    # -- liveness ----------------------------------------------------------------------
+    async def _reaper(self) -> None:
+        """Requeue tasks of consumers that missed two heartbeats."""
+        while True:
+            await asyncio.sleep(self.heartbeat)
+            deadline = time.monotonic() - 2 * self.heartbeat
+            dead = [cid for cid, beat in self._last_beat.items()
+                    if beat < deadline]
+            for cid in dead:
+                logger.warning("consumer %s missed heartbeats; requeueing",
+                               cid[:8])
+                writer = self._clients.get(cid)
+                if writer is not None:
+                    writer.close()
+                self._drop_client(cid)
+            if dead:
+                for queue in list(self._consumers):
+                    self._deliver(queue)
+
+
+class BrokerClient:
+    """Communicator-compatible client for the broker (kiwiPy role).
+
+    Runs its protocol on the caller's event loop; heartbeats are sent from
+    a background task so a busy worker still responds (kiwiPy runs a
+    separate thread for the same reason — see paper §III.C.a)."""
+
+    def __init__(self, host: str, port: int):
+        self.host = host
+        self.port = port
+        self._reader: asyncio.StreamReader | None = None
+        self._writer: asyncio.StreamWriter | None = None
+        self._rpc_handlers: dict[str, Callable] = {}
+        self._task_handlers: dict[str, Callable[[dict], Awaitable]] = {}
+        self._broadcast_handlers: dict[int, tuple[str | None, Callable]] = {}
+        self._bc_counter = itertools.count()
+        self._rpc_waiters: dict[str, asyncio.Future] = {}
+        self._tasks: list[asyncio.Task] = []
+        self.heartbeat = 1.0
+
+    async def connect(self) -> None:
+        self._reader, self._writer = await asyncio.open_connection(
+            self.host, self.port)
+        # re-register any existing subscriptions (reconnect path)
+        for identifier in self._rpc_handlers:
+            self._send({"kind": "rpc_register", "identifier": identifier})
+        for queue in self._task_handlers:
+            self._send({"kind": "consume", "queue": queue})
+        if not self._tasks:
+            self._tasks.append(asyncio.ensure_future(self._recv_loop()))
+            self._tasks.append(asyncio.ensure_future(self._heartbeat_loop()))
+
+    def _send(self, msg: dict) -> None:
+        if self._writer is None or self._writer.is_closing():
+            return
+        try:
+            self._writer.write(json.dumps(msg).encode() + b"\n")
+        except Exception:  # noqa: BLE001 — reconnect loop will recover
+            pass
+
+    async def _heartbeat_loop(self) -> None:
+        while True:
+            self._send({"kind": "heartbeat"})
+            await asyncio.sleep(self.heartbeat)
+
+    async def _reconnect(self) -> None:
+        delay = 0.2
+        while True:
+            try:
+                await self.connect()
+                logger.info("broker client reconnected")
+                return
+            except OSError:
+                await asyncio.sleep(delay)
+                delay = min(delay * 2, 5.0)
+
+    async def _recv_loop(self) -> None:
+        while True:
+            assert self._reader is not None
+            line = await self._reader.readline()
+            if not line:
+                # connection lost (e.g. broker reaped us while busy, or
+                # broker restarted): reconnect and resubscribe
+                if self._writer is not None:
+                    self._writer.close()
+                self._reader = self._writer = None
+                await self._reconnect()
+                continue
+            msg = json.loads(line)
+            kind = msg.get("kind")
+            if kind == "task":
+                asyncio.ensure_future(self._run_task(msg))
+            elif kind == "rpc_request":
+                await self._run_rpc(msg)
+            elif kind == "rpc_reply":
+                fut = self._rpc_waiters.pop(msg["rid"], None)
+                if fut and not fut.done():
+                    if "error" in msg:
+                        fut.set_exception(KeyError(msg["error"]))
+                    else:
+                        fut.set_result(msg.get("result"))
+            elif kind == "broadcast":
+                import fnmatch
+                for filt, handler in list(self._broadcast_handlers.values()):
+                    if filt and not fnmatch.fnmatch(msg["subject"], filt):
+                        continue
+                    try:
+                        handler(msg["subject"], msg.get("sender"),
+                                msg.get("body", {}))
+                    except Exception:  # noqa: BLE001
+                        logger.exception("broadcast handler failed")
+
+    async def _run_task(self, msg: dict) -> None:
+        handler = self._task_handlers.get(msg["queue"])
+        if handler is None:
+            self._send({"kind": "nack", "task_id": msg["task_id"],
+                        "queue": msg["queue"]})
+            return
+        try:
+            await handler(msg["payload"])
+            self._send({"kind": "ack", "task_id": msg["task_id"]})
+        except Exception:  # noqa: BLE001
+            logger.exception("task failed; nacking for requeue")
+            self._send({"kind": "nack", "task_id": msg["task_id"],
+                        "queue": msg["queue"]})
+
+    async def _run_rpc(self, msg: dict) -> None:
+        handler = self._rpc_handlers.get(msg["identifier"])
+        reply: dict = {"kind": "rpc_reply", "rid": msg["rid"]}
+        if handler is None:
+            reply["error"] = f"no handler {msg['identifier']!r}"
+        else:
+            try:
+                res = handler(msg["msg"])
+                if asyncio.iscoroutine(res):
+                    res = await res
+                reply["result"] = res
+            except Exception as exc:  # noqa: BLE001
+                reply["error"] = repr(exc)
+        self._send(reply)
+
+    # -- Communicator interface ---------------------------------------------------
+    def add_rpc_subscriber(self, identifier: str, handler: Callable) -> None:
+        self._rpc_handlers[identifier] = handler
+        self._send({"kind": "rpc_register", "identifier": identifier})
+
+    def remove_rpc_subscriber(self, identifier: str) -> None:
+        self._rpc_handlers.pop(identifier, None)
+
+    async def rpc_send_async(self, identifier: str, msg: dict) -> Any:
+        rid = str(uuid.uuid4())
+        fut = asyncio.get_running_loop().create_future()
+        self._rpc_waiters[rid] = fut
+        self._send({"kind": "rpc_send", "rid": rid, "identifier": identifier,
+                    "msg": msg})
+        return await fut
+
+    def rpc_send(self, identifier: str, msg: dict) -> Any:
+        return self.rpc_send_async(identifier, msg)
+
+    def add_broadcast_subscriber(self, handler: Callable,
+                                 subject_filter: str | None = None) -> int:
+        token = next(self._bc_counter)
+        self._broadcast_handlers[token] = (subject_filter, handler)
+        return token
+
+    def remove_broadcast_subscriber(self, token: int) -> None:
+        self._broadcast_handlers.pop(token, None)
+
+    def broadcast_send(self, subject: str, sender: Any = None,
+                       body: dict | None = None) -> None:
+        self._send({"kind": "broadcast", "subject": subject,
+                    "sender": sender, "body": body or {}})
+
+    def task_send(self, queue: str, payload: dict) -> None:
+        self._send({"kind": "task_send", "queue": queue, "payload": payload})
+
+    def add_task_subscriber(self, queue: str,
+                            handler: Callable[[dict], Awaitable]) -> None:
+        self._task_handlers[queue] = handler
+        self._send({"kind": "consume", "queue": queue})
+
+    def close(self) -> None:
+        for t in self._tasks:
+            t.cancel()
+        if self._writer is not None:
+            self._writer.close()

@@ -1,0 +1,122 @@
+"""kiwiPy-style communicator (paper §III.C): task queues, RPC, broadcast.
+
+``LocalCommunicator`` — in-process implementation with RabbitMQ-faithful
+task-queue semantics: tasks are acknowledged only on successful completion;
+un-acked tasks are redelivered (requeued) after a visibility timeout, which
+is the in-process analogue of RabbitMQ's heartbeat-based requeue.
+
+The cross-process implementation with durable (sqlite) queues lives in
+``repro.engine.broker`` and exposes the same interface.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import fnmatch
+import itertools
+import time
+from typing import Any, Awaitable, Callable
+
+RpcHandler = Callable[[dict], Any]
+BroadcastHandler = Callable[[str, Any, dict], None]
+TaskHandler = Callable[[dict], Awaitable[Any]]
+
+
+class CommunicatorClosed(RuntimeError):
+    pass
+
+
+class LocalCommunicator:
+    def __init__(self, *, requeue_timeout: float = 30.0):
+        self._rpc: dict[str, RpcHandler] = {}
+        self._broadcast: dict[int, tuple[str | None, BroadcastHandler]] = {}
+        self._bc_counter = itertools.count()
+        self._queues: dict[str, asyncio.Queue] = {}
+        self._subscribers: dict[str, list[TaskHandler]] = {}
+        self._consumers: dict[str, asyncio.Task] = {}
+        self._inflight: dict[str, list[tuple[float, dict]]] = {}
+        self.requeue_timeout = requeue_timeout
+        self._closed = False
+
+    # -- RPC -------------------------------------------------------------------
+    def add_rpc_subscriber(self, identifier: str, handler: RpcHandler) -> None:
+        self._rpc[identifier] = handler
+
+    def remove_rpc_subscriber(self, identifier: str) -> None:
+        self._rpc.pop(identifier, None)
+
+    def rpc_send(self, identifier: str, msg: dict) -> Any:
+        handler = self._rpc.get(identifier)
+        if handler is None:
+            raise KeyError(f"no RPC subscriber for {identifier!r}")
+        return handler(msg)
+
+    # -- broadcast ----------------------------------------------------------------
+    def add_broadcast_subscriber(self, handler: BroadcastHandler,
+                                 subject_filter: str | None = None) -> int:
+        token = next(self._bc_counter)
+        self._broadcast[token] = (subject_filter, handler)
+        return token
+
+    def remove_broadcast_subscriber(self, token: int) -> None:
+        self._broadcast.pop(token, None)
+
+    def broadcast_send(self, subject: str, sender: Any = None,
+                       body: dict | None = None) -> None:
+        for subject_filter, handler in list(self._broadcast.values()):
+            if subject_filter and not fnmatch.fnmatch(subject, subject_filter):
+                continue
+            try:
+                handler(subject, sender, body or {})
+            except Exception:  # noqa: BLE001 — subscribers cannot break engine
+                import logging
+                logging.getLogger("repro.engine").exception(
+                    "broadcast subscriber failed")
+
+    # -- task queues ------------------------------------------------------------------
+    def _queue(self, name: str) -> asyncio.Queue:
+        if name not in self._queues:
+            self._queues[name] = asyncio.Queue()
+            self._inflight[name] = []
+        return self._queues[name]
+
+    def task_send(self, queue: str, payload: dict) -> None:
+        self._queue(queue).put_nowait(payload)
+
+    def add_task_subscriber(self, queue: str, handler: TaskHandler) -> None:
+        self._subscribers.setdefault(queue, []).append(handler)
+        if queue not in self._consumers:
+            self._consumers[queue] = asyncio.ensure_future(
+                self._consume(queue))
+
+    async def _consume(self, queue: str) -> None:
+        q = self._queue(queue)
+        while not self._closed:
+            payload = await q.get()
+            handlers = self._subscribers.get(queue, [])
+            if not handlers:
+                q.put_nowait(payload)
+                await asyncio.sleep(0.05)
+                continue
+            handler = handlers[0]
+            entry = (time.monotonic(), payload)
+            self._inflight[queue].append(entry)
+            try:
+                await handler(payload)
+                # success -> ack (drop from inflight)
+                self._inflight[queue].remove(entry)
+            except Exception:  # noqa: BLE001 — nack: requeue the task
+                import logging
+                logging.getLogger("repro.engine").exception(
+                    "task handler failed; requeuing")
+                self._inflight[queue].remove(entry)
+                q.put_nowait(payload)
+                await asyncio.sleep(0.1)
+
+    def queue_depth(self, queue: str) -> int:
+        return self._queue(queue).qsize()
+
+    def close(self) -> None:
+        self._closed = True
+        for task in self._consumers.values():
+            task.cancel()

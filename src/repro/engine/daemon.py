@@ -1,0 +1,200 @@
+"""The daemon (paper §III.A.1 — the Circus role).
+
+Spawns and supervises: one broker process (the RabbitMQ role) and N worker
+processes, each running one Runner with S process slots — scaling is
+horizontal × vertical = workers × slots (paper fig. 5). Crashed workers are
+restarted; their in-flight tasks are requeued by the broker heartbeat
+reaper, and the replacement worker resumes the processes from their last
+checkpoints.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import importlib
+import json
+import logging
+import multiprocessing as mp
+import os
+import time
+from typing import Any
+
+logger = logging.getLogger("repro.engine.daemon")
+
+PROCESS_QUEUE = "process.queue"
+
+
+# ---------------------------------------------------------------------------
+# Worker main
+# ---------------------------------------------------------------------------
+
+def _worker_main(broker_host: str, broker_port: int, store_path: str,
+                 slots: int, crash_after: float | None = None) -> None:
+    """Entry point of one daemon worker OS process."""
+    import random
+
+    from repro.core.process import Process
+    from repro.engine.broker import BrokerClient
+    from repro.engine.runner import Runner, set_default_runner
+    from repro.provenance.store import configure_store
+
+    logging.basicConfig(level=logging.WARNING)
+    store = configure_store(store_path)
+
+    async def main() -> None:
+        client = BrokerClient(broker_host, broker_port)
+        await client.connect()
+        runner = Runner(store=store, communicator=client, slots=slots)
+        runner.distributed = True
+        set_default_runner(runner)
+
+        async def handle(payload: dict) -> None:
+            pk = payload["pk"]
+            checkpoint = store.load_checkpoint(pk)
+            if checkpoint is None:
+                node = store.get_node(pk)
+                if node and node.get("process_state") in (
+                        "finished", "excepted", "killed"):
+                    return  # duplicate delivery of a finished process
+                raise RuntimeError(f"no checkpoint for process {pk}")
+            process = Process.recreate_from_checkpoint(checkpoint,
+                                                       runner=runner)
+            runner._register_rpc(process)
+            try:
+                await process.step_until_terminated()
+            finally:
+                runner.communicator.remove_rpc_subscriber(f"process.{pk}")
+
+        client.add_task_subscriber(PROCESS_QUEUE, handle)
+        if crash_after is not None:
+            # fault-injection for tests: die hard mid-work
+            await asyncio.sleep(crash_after + random.random() * 0.1)
+            os._exit(17)
+        while True:
+            await asyncio.sleep(3600)
+
+    asyncio.run(main())
+
+
+def _broker_main(db_path: str, port_file: str) -> None:
+    from repro.engine.broker import BrokerServer
+
+    logging.basicConfig(level=logging.WARNING)
+
+    async def main() -> None:
+        server = BrokerServer(db_path, heartbeat=1.0)
+        host, port = await server.start()
+        with open(port_file, "w") as fh:
+            json.dump({"host": host, "port": port}, fh)
+        while True:
+            await asyncio.sleep(3600)
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# The daemon supervisor
+# ---------------------------------------------------------------------------
+
+class Daemon:
+    def __init__(self, workdir: str, *, workers: int = 2, slots: int = 50,
+                 store_path: str | None = None,
+                 crash_after: float | None = None):
+        self.workdir = workdir
+        os.makedirs(workdir, exist_ok=True)
+        self.store_path = store_path or os.path.join(workdir, "provenance.db")
+        self.broker_db = os.path.join(workdir, "broker.db")
+        self.port_file = os.path.join(workdir, "broker.json")
+        self.n_workers = workers
+        self.slots = slots
+        self.crash_after = crash_after
+        self._ctx = mp.get_context("spawn")
+        self._broker_proc: mp.Process | None = None
+        self._workers: list[mp.Process] = []
+        self.host: str | None = None
+        self.port: int | None = None
+
+    # -- lifecycle ---------------------------------------------------------------
+    def start(self, timeout: float = 20.0) -> None:
+        if os.path.exists(self.port_file):
+            os.unlink(self.port_file)
+        self._broker_proc = self._ctx.Process(
+            target=_broker_main, args=(self.broker_db, self.port_file),
+            daemon=True)
+        self._broker_proc.start()
+        t0 = time.time()
+        while not os.path.exists(self.port_file):
+            if time.time() - t0 > timeout:
+                raise TimeoutError("broker did not start")
+            time.sleep(0.05)
+        time.sleep(0.05)
+        with open(self.port_file) as fh:
+            info = json.load(fh)
+        self.host, self.port = info["host"], info["port"]
+        for i in range(self.n_workers):
+            self._spawn_worker()
+
+    def _spawn_worker(self) -> None:
+        p = self._ctx.Process(
+            target=_worker_main,
+            args=(self.host, self.port, self.store_path, self.slots,
+                  self.crash_after),
+            daemon=True)
+        p.start()
+        self._workers.append(p)
+
+    def supervise(self) -> int:
+        """Restart dead workers (the Circus role). Returns #restarts."""
+        restarts = 0
+        for i, p in enumerate(list(self._workers)):
+            if not p.is_alive():
+                logger.warning("worker %d died (exitcode %s); restarting",
+                               i, p.exitcode)
+                self._workers.remove(p)
+                self._spawn_worker()
+                restarts += 1
+        return restarts
+
+    def scale_workers(self, n: int) -> None:
+        """Dynamically grow/shrink the pool (Circus 'incr')."""
+        while len(self._workers) < n:
+            self._spawn_worker()
+        while len(self._workers) > n:
+            p = self._workers.pop()
+            p.terminate()
+        self.n_workers = n
+
+    def stop(self) -> None:
+        for p in self._workers:
+            p.terminate()
+        if self._broker_proc is not None:
+            self._broker_proc.terminate()
+        for p in self._workers:
+            p.join(timeout=5)
+        if self._broker_proc is not None:
+            self._broker_proc.join(timeout=5)
+
+    # -- client-side submission ---------------------------------------------------
+    def submit(self, process_class: type, inputs: dict | None = None) -> int:
+        """Create the process node + initial checkpoint locally, then ship
+        the pk through the durable task queue (paper §III.C.a)."""
+        from repro.engine.runner import Runner
+        from repro.provenance.store import configure_store, current_store
+
+        store = current_store()
+        if store.path != self.store_path:
+            store = configure_store(self.store_path)
+        runner = Runner(store=store)
+        process = process_class(inputs=inputs, runner=runner)
+        pk = process.pk
+        self.send_task(pk)
+        return pk
+
+    def send_task(self, pk: int) -> None:
+        import socket
+
+        msg = json.dumps({"kind": "task_send", "queue": PROCESS_QUEUE,
+                          "payload": {"pk": pk}}) + "\n"
+        with socket.create_connection((self.host, self.port), timeout=10) as s:
+            s.sendall(msg.encode())
+            time.sleep(0.05)

@@ -1,0 +1,220 @@
+"""The Runner (paper §III.A): event loop + persistence + communication +
+transport, with vertical scaling via *process slots*.
+
+A runner can drive any number of concurrent processes (bounded by its slot
+count); the daemon (engine/daemon.py) scales horizontally by running one
+runner per OS worker process.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import logging
+from typing import Any
+
+from repro.core.exit_code import ExitCode
+from repro.core.process import Process
+from repro.engine.communicator import LocalCommunicator
+from repro.provenance.store import ProvenanceStore, current_store
+
+TERMINAL = ("finished", "excepted", "killed")
+
+logger = logging.getLogger("repro.engine")
+
+
+class ProcessHandle:
+    def __init__(self, process: Process, task: asyncio.Task | None = None):
+        self.process = process
+        self.task = task
+
+    @property
+    def pk(self) -> int:
+        return self.process.pk
+
+    async def wait(self) -> ExitCode:
+        await self.process.wait_done()
+        return self.process.exit_code
+
+
+class QueuedHandle:
+    """Handle for a process shipped to the daemon via the task queue."""
+
+    def __init__(self, pk: int):
+        self.pk = pk
+
+
+class Runner:
+    def __init__(self, *, store: ProvenanceStore | None = None,
+                 communicator=None, loop: asyncio.AbstractEventLoop | None = None,
+                 slots: int = 200, poll_interval: float = 2.0):
+        self.store = store or current_store()
+        self.communicator = communicator or LocalCommunicator()
+        self._loop = loop
+        self.slots = slots
+        self.poll_interval = poll_interval
+        self.logger = logger
+        self._processes: dict[int, ProcessHandle] = {}
+        self._slot_sem: asyncio.Semaphore | None = None
+        from repro.engine.transport import TransportQueue
+        self.transport_queue = TransportQueue()
+
+    # -- loop plumbing -----------------------------------------------------------
+    @property
+    def loop(self) -> asyncio.AbstractEventLoop:
+        if self._loop is None:
+            try:
+                self._loop = asyncio.get_running_loop()
+            except RuntimeError:
+                self._loop = asyncio.new_event_loop()
+                asyncio.set_event_loop(self._loop)
+        return self._loop
+
+    def _sem(self) -> asyncio.Semaphore:
+        if self._slot_sem is None:
+            self._slot_sem = asyncio.Semaphore(self.slots)
+        return self._slot_sem
+
+    # -- process control RPC (paper §III.C.b) ---------------------------------------
+    def _register_rpc(self, process: Process) -> None:
+        def handler(msg: dict):
+            action = msg.get("action")
+            if action == "pause":
+                process.pause()
+                return True
+            if action == "play":
+                process.play()
+                return True
+            if action == "kill":
+                process.kill(msg.get("message", "killed via RPC"))
+                return True
+            if action == "status":
+                return process.state.value
+            raise ValueError(f"unknown RPC action {action!r}")
+
+        self.communicator.add_rpc_subscriber(f"process.{process.pk}", handler)
+
+    def control(self, pk: int, action: str, **kw) -> Any:
+        return self.communicator.rpc_send(f"process.{pk}",
+                                          {"action": action, **kw})
+
+    # -- submission --------------------------------------------------------------------
+    def submit(self, process_class: type, inputs: dict | None = None,
+               parent_pk: int | None = None):
+        """Instantiate + schedule a process. In distributed (daemon) mode
+        the process node + checkpoint are created locally but execution is
+        shipped through the durable task queue, so any worker can pick it
+        up (and resume it if that worker dies)."""
+        process = process_class(inputs=inputs, runner=self,
+                                parent_pk=parent_pk)
+        if getattr(self, "distributed", False):
+            from repro.engine.daemon import PROCESS_QUEUE
+            self.communicator.task_send(PROCESS_QUEUE, {"pk": process.pk})
+            return QueuedHandle(process.pk)
+        return self._schedule(process)
+
+    def _schedule(self, process: Process) -> ProcessHandle:
+        self._register_rpc(process)
+
+        async def _drive():
+            async with self._sem():
+                try:
+                    return await process.step_until_terminated()
+                finally:
+                    self.communicator.remove_rpc_subscriber(
+                        f"process.{process.pk}")
+                    self._processes.pop(process.pk, None)
+
+        # create_task works on a not-yet-running loop; the task starts when
+        # the loop does.
+        task = self.loop.create_task(_drive())
+        handle = ProcessHandle(process, task)
+        self._processes[process.pk] = handle
+        return handle
+
+    def resume_from_checkpoint(self, pk: int) -> ProcessHandle | None:
+        """Recreate a process from its persisted checkpoint and schedule it."""
+        checkpoint = self.store.load_checkpoint(pk)
+        if checkpoint is None:
+            return None
+        process = Process.recreate_from_checkpoint(checkpoint, runner=self)
+        return self._schedule(process)
+
+    # -- synchronous driving ---------------------------------------------------------
+    def run_sync(self, process: Process) -> ExitCode:
+        """Drive a process without suspending (process functions block the
+        interpreter by design, §II.B.2). Works inside or outside a running
+        event loop."""
+        coro = process.step_until_terminated()
+        try:
+            coro.send(None)
+        except StopIteration as stop:
+            return stop.value
+        coro.close()
+        raise RuntimeError(
+            f"{type(process).__name__} attempted a real asynchronous wait "
+            "inside a synchronous (process function) context")
+
+    def run(self, process_class: type, inputs: dict | None = None
+            ) -> tuple[dict, Process]:
+        """Blockingly run a process to completion on this runner's loop."""
+        process = process_class(inputs=inputs, runner=self)
+        self._register_rpc(process)
+        if self.loop.is_running():
+            raise RuntimeError("Runner.run() cannot be used inside a running "
+                               "loop; use submit()")
+        self.loop.run_until_complete(process.step_until_terminated())
+        return process.outputs, process
+
+    def run_until_complete(self, awaitable):
+        return self.loop.run_until_complete(awaitable)
+
+    # -- waiting on processes (local fast-path, remote via broadcast+poll) -----------
+    async def wait_for_process(self, pk: int) -> None:
+        handle = self._processes.get(pk)
+        if handle is not None:
+            await handle.process.wait_done()
+            return
+
+        node = self.store.get_node(pk)
+        if node and node.get("process_state") in TERMINAL:
+            return
+
+        ev = asyncio.Event()
+        loop = asyncio.get_running_loop()
+
+        def on_broadcast(subject: str, sender, body):
+            if sender == pk and subject.split(".")[-1] in TERMINAL:
+                loop.call_soon_threadsafe(ev.set)
+
+        token = self.communicator.add_broadcast_subscriber(
+            on_broadcast, subject_filter="state_changed.*")
+        try:
+            while not ev.is_set():
+                node = self.store.get_node(pk)
+                if node and node.get("process_state") in TERMINAL:
+                    return
+                try:
+                    await asyncio.wait_for(ev.wait(),
+                                           timeout=self.poll_interval)
+                except asyncio.TimeoutError:
+                    continue
+        finally:
+            self.communicator.remove_broadcast_subscriber(token)
+
+    def close(self) -> None:
+        self.communicator.close()
+
+
+_DEFAULT: Runner | None = None
+
+
+def default_runner() -> Runner:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Runner()
+    return _DEFAULT
+
+
+def set_default_runner(runner: Runner | None) -> None:
+    global _DEFAULT
+    _DEFAULT = runner

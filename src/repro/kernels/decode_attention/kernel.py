@@ -1,0 +1,106 @@
+"""Flash-decode Pallas kernel: one query token against a deep KV cache.
+
+Decode is HBM-bandwidth bound (the whole cache is read once per token); the
+kernel streams KV blocks through VMEM with the online-softmax recurrence,
+grid = (B, Hkv, nKV) with the KV axis innermost/sequential. All G query
+heads of a KV group are processed together so the cache is read ONCE per
+group (the GQA arithmetic-intensity win). Per-row cache lengths arrive via
+scalar prefetch (SMEM), letting one batch mix ragged sequence lengths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, nkv, bkv):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = lens_ref[ib]
+    needed = (ik * bkv) < kv_len
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bkv, hd)
+        logits = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        pos = ik * bkv + lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        logits = jnp.where(pos < kv_len, logits, NEG_INF)  # (G, bkv)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        pv = lax.dot_general(p.astype(v_ref.dtype), v_ref[0, 0],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, kv_len, *, scale, block_kv, interpret):
+    """q: (B, H, hd); k/v: (B, Smax, Hkv, hd); kv_len: (B,) int32."""
+    b, h, hd = q.shape
+    smax, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bkv = min(block_kv, smax)
+    while smax % bkv:
+        bkv //= 2
+    nkv = smax // bkv
+
+    qg = q.reshape(b, hkv, g, hd)
+    kt = k.transpose(0, 2, 1, 3)    # (B, Hkv, Smax, hd)
+    vt = v.transpose(0, 2, 1, 3)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+
+    kernel = functools.partial(_kernel, scale=scale, nkv=nkv, bkv=bkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, nkv),
+        in_specs=[
+            # index maps receive the scalar-prefetch ref as a trailing arg
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda ib, ih, ik, lens: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda ib, ih, ik, lens: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda ib, ih, ik, lens: (ib, ih, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda ib, ih, ik, lens: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(lens, qg, kt, vt)
+    return out.reshape(b, h, hd)

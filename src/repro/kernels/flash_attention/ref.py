@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA + causal + local
+window + softcap). Materialises the full (Sq, Skv) logits — only usable at
+test scale, which is exactly its job."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0, scale: float | None = None,
+                  softcap: float = 0.0, q_offset: int = 0) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, Hkv, hd); H % Hkv == 0.
+
+    ``q_offset`` is the absolute position of q[0] (decode/continuation)."""
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    qg = q.reshape(b, sq, hkv, g, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap and softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(skv)
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

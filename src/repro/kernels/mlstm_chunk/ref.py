@@ -1,0 +1,9 @@
+"""Oracle for the chunkwise mLSTM kernel: the exact sequential recurrence
+(identical math to repro.models.xlstm.mlstm_recurrent_ref, re-exported here
+so the kernel package is self-contained)."""
+
+from repro.models.xlstm import mlstm_recurrent_ref  # noqa: F401
+
+
+def mlstm_ref(q, k, v, li, lf, C0, n0, m0):
+    return mlstm_recurrent_ref(q, k, v, li, lf, C0, n0, m0)

@@ -1,0 +1,24 @@
+"""Oracle for the RG-LRU linear-recurrence kernel: exact sequential scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_scan_ref(a: jax.Array, x: jax.Array, h0: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + x_t. a, x: (B, S, D) fp32; h0: (B, D).
+
+    Returns (h for every t, final h)."""
+
+    def step(h, inputs):
+        at, xt = inputs
+        h = at * h + xt
+        return h, h
+
+    a_t = a.astype(jnp.float32).transpose(1, 0, 2)
+    x_t = x.astype(jnp.float32).transpose(1, 0, 2)
+    h_last, hs = lax.scan(step, h0.astype(jnp.float32), (a_t, x_t))
+    return hs.transpose(1, 0, 2), h_last

@@ -1,0 +1,418 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# This file is the ONLY place the 512 placeholder devices are forced; smoke
+# tests and benchmarks see the real (single) CPU device.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import pathlib           # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config, ARCH_IDS               # noqa: E402
+from repro.distributed.sharding import (                     # noqa: E402
+    make_rules, tree_named_shardings)
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.models.common import axis_rules                   # noqa: E402
+from repro.models.registry import SHAPES, build              # noqa: E402
+from repro.serving.serve import make_decode_step, make_prefill_step  # noqa: E402
+from repro.training.train_step import (                      # noqa: E402
+    TrainConfig, make_train_step, train_state_axes, train_state_shapes)
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<shape>\([^)]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str, pod_stride: int = 256) -> dict:
+    """Per-device wire-byte estimates per collective kind (ring model).
+
+    all-gather: S*(n-1)/n   all-reduce: 2*S*(n-1)/n
+    reduce-scatter: S_out*(n-1)   all-to-all: S*(n-1)/n   permute: S
+    where S is the op's output bytes and n the replica-group size.
+    """
+    out = {k: 0.0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    dcn_bytes = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        s = _shape_bytes(m.group("shape"))
+        n = 1
+        cross_pod = False
+        ge = _GROUPS_EXPL_RE.search(line)
+        if ge:
+            ids = [int(x) for x in ge.group(1).split(",")]
+            n = len(ids)
+            cross_pod = len({i // pod_stride for i in ids}) > 1
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                n = int(gi.group(2))
+        if n <= 1:
+            continue
+        if op == "all-gather":
+            wire = s * (n - 1) / n
+        elif op == "all-reduce":
+            wire = 2.0 * s * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = s * (n - 1)
+        elif op == "all-to-all":
+            wire = s * (n - 1) / n
+        else:
+            wire = float(s)
+        out[op] += wire
+        counts[op] += 1
+        if cross_pod:
+            dcn_bytes += wire
+    return {"wire_bytes": out, "counts": counts,
+            "total_wire_bytes": sum(out.values()),
+            "dcn_wire_bytes": dcn_bytes}
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """Sharding/numerics knobs explored by the §Perf hillclimb."""
+
+    name: str = "baseline"
+    fsdp: bool = False               # paper-naive baseline: pure DP + TP
+    fsdp_over_pod: bool = False
+    act_seq_shard: bool = False
+    microbatches: int = 1
+    remat_policy: str = "nothing_saveable"
+    kv_cache_dtype: str = "bfloat16"
+    attn_impl: str = ""              # '' = config default
+    param_dtype: str = "float32"
+    optimizer: str = "adamw"
+    parallelism: str = "tp"          # tp | zero3 | serve2d
+    ce_chunk: int = 0                # chunked cross-entropy (0 = off)
+    moe_capacity_factor: float = 0.0  # 0 = config default
+
+
+BASELINE = Variant()
+OPTIMIZED = Variant(name="optimized", fsdp=True, act_seq_shard=False,
+                    remat_policy="dots_with_no_batch_dims_saveable")
+
+VARIANTS = {
+    "baseline": BASELINE,
+    "optimized": OPTIMIZED,
+    # §Perf hillclimb variants ------------------------------------------------
+    # ZeRO-3: both in-pod axes are data parallel; params fully sharded and
+    # all-gathered per layer. Kills the per-layer TP activation all-reduces.
+    "zero3": Variant(name="zero3", parallelism="zero3",
+                     remat_policy="dots_with_no_batch_dims_saveable"),
+    # + Adafactor (factored second moment) for the 314B-class footprint
+    "zero3_af": Variant(name="zero3_af", parallelism="zero3",
+                        remat_policy="dots_with_no_batch_dims_saveable",
+                        optimizer="adafactor"),
+    # ZeRO-3 with full remat (trades compute for activation memory)
+    "zero3_full_remat": Variant(name="zero3_full_remat", parallelism="zero3",
+                                remat_policy="nothing_saveable"),
+    # + chunked cross-entropy: never materialize (B, S, vocab) fp32 logits
+    "zero3_ce": Variant(name="zero3_ce", parallelism="zero3",
+                        remat_policy="nothing_saveable", ce_chunk=512),
+    # ZeRO-3 with bf16 parameter storage: all-gathers move half the bytes
+    "zero3_bf16": Variant(name="zero3_bf16", parallelism="zero3",
+                          remat_policy="dots_with_no_batch_dims_saveable",
+                          param_dtype="bfloat16"),
+    # ZeRO-3 + 4-way microbatch accumulation (activation memory / collective
+    # frequency trade)
+    "zero3_mb4": Variant(name="zero3_mb4", parallelism="zero3",
+                         remat_policy="dots_with_no_batch_dims_saveable",
+                         microbatches=4),
+    # MoE: capacity factor 1.0 — shrinks the structural capacity-tensor
+    # all-reduce of TP-in-expert (E*C/g: 2.5x -> 2.0x token count)
+    "tp_cf1": Variant(name="tp_cf1", moe_capacity_factor=1.0,
+                      remat_policy="dots_with_no_batch_dims_saveable"),
+    # serving: bf16 weights + int8 KV cache, TP sharding
+    "serve_opt": Variant(name="serve_opt", param_dtype="bfloat16",
+                         kv_cache_dtype="int8"),
+    # serving: additionally 2D-shard the weights (embed dim over 'data')
+    "serve_opt_2d": Variant(name="serve_opt_2d", param_dtype="bfloat16",
+                            kv_cache_dtype="int8", fsdp=True),
+    # serving: 2D-stationary weights + replicated (tiny) decode activations:
+    # GSPMD re-shards tokens between attention and matmuls instead of
+    # all-gathering weight shards each step
+    "serve_act": Variant(name="serve_act", param_dtype="bfloat16",
+                         kv_cache_dtype="int8", parallelism="serve2d"),
+}
+
+
+def _apply_variant(cfg, var: Variant):
+    kw = dict(remat_policy=var.remat_policy, kv_cache_dtype=var.kv_cache_dtype,
+              param_dtype=var.param_dtype, use_pallas=False,
+              ce_chunk=var.ce_chunk)
+    if var.attn_impl:
+        kw["attn_impl"] = var.attn_impl
+    if var.moe_capacity_factor:
+        kw["moe_capacity_factor"] = var.moe_capacity_factor
+    return cfg.replace(**kw)
+
+
+def total_param_count(bundle) -> int:
+    import math
+
+    shapes = jax.tree.leaves(bundle.param_shapes())
+    return sum(math.prod(s.shape) for s in shapes)
+
+
+def active_param_count(bundle) -> int:
+    """MoE: experts contribute k/E of their parameters per token."""
+    cfg = bundle.cfg
+    if cfg.family != "moe":
+        return total_param_count(bundle)
+    total = 0
+    flat = jax.tree.flatten_with_path(bundle.param_shapes())[0]
+    for path, leaf in flat:
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        keys = "/".join(str(p) for p in path)
+        if "moe" in keys and ("w_gate" in keys or "w_up" in keys or
+                              "w_down" in keys):
+            n = n * cfg.num_experts_per_tok // cfg.num_experts
+        total += n
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               var: Variant = BASELINE, layers: int | None = None):
+    """Lower + compile one (arch x shape x mesh) cell. Returns stats dict.
+
+    ``layers`` overrides the depth and unrolls the stack — used by the
+    collective-bytes slope extraction (L=2 vs L=4, extrapolated to full L,
+    because XLA cost analysis counts scan bodies once)."""
+    cfg = _apply_variant(get_config(arch), var)
+    if layers is not None:
+        kw = {"num_layers": layers, "unroll_layers": True}
+        if cfg.encoder_layers:
+            kw["encoder_layers"] = layers
+        cfg = cfg.replace(**kw)
+    bundle = build(cfg)
+    cell = SHAPES[shape_name]
+    ok, reason = bundle.supports_cell(cell)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "variant": var.name, "skipped": True, "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mesh, fsdp=var.fsdp,
+                       fsdp_over_pod=var.fsdp_over_pod,
+                       act_seq_shard=var.act_seq_shard,
+                       parallelism=var.parallelism)
+    notes: list[str] = []
+    t0 = time.time()
+
+    from repro.training.optim import OptimConfig
+
+    with axis_rules(mesh, rules):
+        if cell.kind == "train":
+            tcfg = TrainConfig(microbatches=var.microbatches,
+                               optim=OptimConfig(name=var.optimizer))
+            state_struct = train_state_shapes(bundle, tcfg)
+            state_axes = train_state_axes(bundle, tcfg)
+            state_sh = tree_named_shardings(state_struct, state_axes, rules,
+                                            mesh, notes)
+            batch_struct = bundle.batch_struct(cell)
+            batch_sh = tree_named_shardings(batch_struct,
+                                            bundle.batch_axes(cell),
+                                            rules, mesh, notes)
+            step = make_train_step(bundle, tcfg)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_struct, batch_struct)
+        else:
+            pshapes = bundle.param_shapes()
+            params_sh = tree_named_shardings(pshapes, bundle.param_axes(),
+                                             rules, mesh, notes)
+            b = cell.global_batch
+            max_len = cell.seq_len
+            cache_struct = jax.eval_shape(
+                lambda: bundle.init_cache(b, max_len))
+            cache_sh = tree_named_shardings(cache_struct, bundle.cache_axes(),
+                                            rules, mesh, notes)
+            if cell.kind == "prefill":
+                batch_struct = bundle.batch_struct(cell)
+                batch_sh = tree_named_shardings(batch_struct,
+                                                bundle.batch_axes(cell),
+                                                rules, mesh, notes)
+                step = make_prefill_step(bundle)
+                jitted = jax.jit(step, in_shardings=(params_sh, batch_sh,
+                                                     cache_sh),
+                                 out_shardings=(None, cache_sh),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(pshapes, batch_struct, cache_struct)
+            else:  # decode
+                tok_struct = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+                tok_sh = tree_named_shardings(
+                    tok_struct, ("batch", None), rules, mesh, notes)
+                pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+                step = make_decode_step(bundle)
+                jitted = jax.jit(step, in_shardings=(params_sh, cache_sh,
+                                                     tok_sh,
+                                                     NamedSharding(mesh, P())),
+                                 out_shardings=(None, cache_sh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(pshapes, cache_struct, tok_struct,
+                                       pos_struct)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as exc:  # noqa: BLE001
+        cost = {"error": str(exc)}
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                mem[attr] = int(v)
+    except Exception as exc:  # noqa: BLE001
+        mem = {"error": str(exc)}
+
+    coll = collective_stats(compiled.as_text())
+
+    n_params = total_param_count(bundle)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "variant": var.name if layers is None else f"{var.name}_L{layers}",
+        "layers_override": layers,
+        "variant_detail": dataclasses.asdict(var),
+        "skipped": False,
+        "n_devices": mesh.devices.size,
+        "params_total": n_params,
+        "params_active": active_param_count(bundle),
+        "tokens_per_step": (cell.global_batch * cell.seq_len
+                            if cell.kind != "decode" else cell.global_batch),
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "cost_analysis": cost,
+        "memory_analysis": mem,
+        "collectives": coll,
+        "sharding_notes": notes[:40],
+    }
+    return result
+
+
+def cell_filename(arch, shape, mesh, variant):
+    return f"{arch}__{shape}__{mesh}__{variant}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--slope", action="store_true",
+                    help="also lower unrolled L=2/L=4 cells for the "
+                         "collective-bytes extrapolation")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 placeholder devices, got {jax.device_count()}; "
+        "run as its own process")
+
+    archs = [a for a in ARCH_IDS if a != "aiida-demo-110m"] \
+        if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    var = VARIANTS[args.variant]
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    # Scanned-stack families need the L2/L4 unrolled slope cells; the
+    # hybrid/ssm families are already unrolled (collectives exact).
+    def slope_layer_counts(arch: str) -> list[int]:
+        fam = get_config(arch).family
+        return [2, 4] if fam in ("dense", "moe", "vlm", "audio") else []
+
+    jobs: list[tuple[str, str, str, int | None]] = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                jobs.append((arch, shape, mesh_name, None))
+                if args.slope:
+                    for lc in slope_layer_counts(arch):
+                        jobs.append((arch, shape, mesh_name, lc))
+
+    for arch, shape, mesh_name, layers in jobs:
+        vname = var.name if layers is None else f"{var.name}_L{layers}"
+        fname = outdir / cell_filename(arch, shape, mesh_name, vname)
+        if fname.exists() and not args.force:
+            print(f"[skip] {fname.name} (cached)")
+            continue
+        print(f"[cell] {arch} x {shape} x {mesh_name} ({vname}) ...",
+              flush=True)
+        try:
+            res = lower_cell(arch, shape, multi_pod=(mesh_name == "multi"),
+                             var=var, layers=layers)
+        except Exception:  # noqa: BLE001
+            res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "variant": vname, "skipped": False,
+                   "error": traceback.format_exc()[-4000:]}
+        fname.write_text(json.dumps(res, indent=1))
+        status = ("SKIP" if res.get("skipped")
+                  else "ERR" if "error" in res else
+                  f"ok lower={res.get('lower_s')}s "
+                  f"compile={res.get('compile_s')}s")
+        print(f"[done] {fname.name}: {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Dense gated MLPs and Mixture-of-Experts layers.
+
+The MoE layer uses the GShard/Switch grouped-einsum dispatch so it lowers to
+clean ``all_to_all`` collectives under GSPMD:
+
+* tokens are reshaped into groups of ``moe_group_size``;
+* per group, each expert has capacity ``C = ceil(g·k/E · capacity_factor)``;
+* dispatch/combine tensors are (G, g, E, C) one-hots — their memory is
+  ``O(tokens · E · C / g)`` which stays modest for the group sizes used.
+
+Two sharding strategies (resolved per architecture):
+
+* ``expert`` (EP): the expert dim of the weights maps to the model axis
+  (moonshot: 64 experts / 16). Dispatch einsums induce all_to_alls.
+* ``ffn`` (TP-in-expert): experts replicated, each expert's d_ff sharded
+  (grok: 8 experts do not divide a 16-way axis, but d_ff=32768 does).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ModelConfig, ParamSpec, act_fn, shard
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def make_mlp_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "ffn")),
+        "w_up": ParamSpec((d, f), ("embed", "ffn")),
+        "w_down": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp_forward(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    act = act_fn(cfg.mlp_act)
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    h = act(g) * u
+    h = shard(h, "batch", None, "ffn_sharded")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def make_moe_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    if cfg.moe_sharding == "expert":
+        # EP: the expert dim takes the model axis; per-expert ffn replicated.
+        ax = ("expert_sharded", "embed", "moe_ffn")
+        ax_down = ("expert_sharded", "moe_ffn", "embed")
+    else:  # TP-in-expert: experts replicated, per-expert ffn takes model axis
+        ax = ("expert", "embed", "moe_ffn")
+        ax_down = ("expert", "moe_ffn", "embed")
+    return {
+        "router": ParamSpec((d, e), ("embed", None)),
+        "w_gate": ParamSpec((e, d, f), ax),
+        "w_up": ParamSpec((e, d, f), ax),
+        "w_down": ParamSpec((e, f, d), ax_down),
+    }
+
+
+def _capacity(cfg: ModelConfig, group: int) -> int:
+    c = int(math.ceil(group * cfg.num_experts_per_tok / cfg.num_experts
+                      * cfg.moe_capacity_factor))
+    return max(4, min(group, c))
+
+
+def moe_forward(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss). x: (B, S, D)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    tokens = b * s
+    g = min(cfg.moe_group_size, tokens)
+    while tokens % g:
+        g //= 2
+    n_groups = tokens // g
+    cap = _capacity(cfg, g)
+
+    xt = x.reshape(n_groups, g, d)
+    xt = shard(xt, "moe_groups", None, None)
+
+    router_logits = jnp.einsum(
+        "gtd,de->gte", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)            # (G, g, E)
+
+    # --- aux loss (Switch-style load balancing) -----------------------------
+    density = jnp.mean(probs, axis=1)                          # (G, E)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), e, dtype=jnp.float32)
+    frac = jnp.mean(top1, axis=1)                              # (G, E)
+    aux_loss = jnp.mean(jnp.sum(density * frac, axis=-1)) * e
+
+    # --- top-k selection -----------------------------------------------------
+    topw, topi = lax.top_k(probs, k)                           # (G, g, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) inside its expert's capacity buffer
+    sel = jax.nn.one_hot(topi, e, dtype=jnp.float32)           # (G, g, k, E)
+    # rank tokens per expert: flatten (g, k) in priority order (token-major)
+    sel_flat = sel.reshape(n_groups, g * k, e)
+    pos_in_expert = jnp.cumsum(sel_flat, axis=1) - sel_flat    # (G, g*k, E)
+    pos_in_expert = pos_in_expert.reshape(n_groups, g, k, e)
+    within_cap = pos_in_expert < cap
+    cap_slot = jax.nn.one_hot(
+        jnp.sum(pos_in_expert * sel, axis=-1).astype(jnp.int32),
+        cap, dtype=jnp.float32)                                # (G, g, k, C)
+    # One-hot routing tensors are piecewise constant: their cotangents are
+    # zero a.e. but, if left differentiable, XLA materialises fp32
+    # (G,g,E,C)-shaped gradient paths (44 GB/layer/device of all-reduce for
+    # grok-1 — measured). Router gradient flows through `topw` only.
+    sel_live = lax.stop_gradient(sel * within_cap)             # (G, g, k, E)
+    cap_slot = lax.stop_gradient(cap_slot)                     # (G, g, k, C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", sel_live, cap_slot)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", sel_live, cap_slot, topw)
+
+    dispatch = dispatch.astype(dt)
+    expert_in = jnp.einsum("gtec,gtd->egcd", dispatch, xt)     # (E, G, C, D)
+    expert_in = shard(expert_in, "expert_sharded", "moe_groups", None, None)
+
+    act = act_fn(cfg.mlp_act)
+    hg = jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"].astype(dt))
+    hu = jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"].astype(dt))
+    h = act(hg) * hu
+    h = shard(h, "expert_sharded", "moe_groups", None, "moe_ffn_act")
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["w_down"].astype(dt))
+    # NO sharding constraint on expert_out: under TP-in-expert its f-
+    # contraction leaves per-shard partial sums, and constraining it here
+    # forces an all-reduce of the fat (E,G,C,D) capacity tensor (measured:
+    # 44 GB/layer/device fp32 on grok-1). Leaving it unconstrained lets
+    # GSPMD carry the partial sums through the combine einsum and reduce
+    # the (G,g,D) token tensor instead — ~5x fewer wire bytes.
+
+    out = jnp.einsum("gtec,egcd->gtd", combine.astype(dt), expert_out)
+    out = shard(out, "moe_groups", None, None)
+    return out.reshape(b, s, d), aux_loss.astype(jnp.float32)

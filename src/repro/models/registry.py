@@ -1,0 +1,172 @@
+"""Uniform model interface over all architecture families.
+
+Every family exposes the same five entry points so the training loop,
+serving loop, launcher and dry-run treat architectures opaquely (the same
+way AiiDA's engine treats simulation codes opaquely — criterion (ii) of the
+paper):
+
+    loss_fn(params, batch)                  -> (loss, metrics)
+    prefill_fn(params, batch, cache)        -> (logits, cache)
+    decode_fn(params, cache, tokens, pos)   -> (logits, cache)
+    init_cache(batch_size, max_len)         -> cache pytree
+    cache_axes()                            -> logical-axis pytree for cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, rglru, transformer, xlstm
+from repro.models.common import ModelConfig, spec_axes, spec_shapes
+
+LM_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (input-shape) cell."""
+
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# Families whose attention cost is sub-quadratic (may run long_500k).
+SUBQUADRATIC_FAMILIES = ("hybrid", "ssm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    specs: Any
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    init_cache: Callable
+    cache_axes: Callable
+
+    # -- parameter helpers ---------------------------------------------------
+    def param_shapes(self):
+        return spec_shapes(self.specs, self.cfg.weight_dtype)
+
+    def param_axes(self):
+        return spec_axes(self.specs)
+
+    def init_params(self, rng: jax.Array):
+        from repro.models.common import init_params
+        return init_params(rng, self.specs, self.cfg.weight_dtype)
+
+    # -- input specs (ShapeDtypeStruct stand-ins, no allocation) -------------
+    def batch_struct(self, cell: ShapeCell) -> dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        b, s = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        bf = cfg.activation_dtype
+        if cell.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if cfg.family == "vlm":
+            s_text = max(s - cfg.num_patches, 16)
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s_text), i32),
+                "labels": jax.ShapeDtypeStruct((b, s_text), i32),
+                "patches": jax.ShapeDtypeStruct((b, cfg.num_patches,
+                                                 cfg.d_model), bf),
+            }
+        if cfg.family == "audio":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+                "frames": jax.ShapeDtypeStruct((b, cfg.num_frames,
+                                                cfg.d_model), bf),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+
+    def batch_axes(self, cell: ShapeCell) -> dict[str, tuple]:
+        cfg = self.cfg
+        if cell.kind == "decode":
+            return {"tokens": ("batch", None)}
+        out: dict[str, tuple] = {"tokens": ("batch", None),
+                                 "labels": ("batch", None)}
+        if cfg.family == "vlm":
+            out["patches"] = ("batch", None, None)
+        if cfg.family == "audio":
+            out["frames"] = ("batch", None, None)
+        return out
+
+    def supports_cell(self, cell: ShapeCell) -> tuple[bool, str]:
+        if cell.name == "long_500k" and \
+                self.cfg.family not in SUBQUADRATIC_FAMILIES:
+            return False, "full attention is O(S^2); long_500k assigned to " \
+                          "sub-quadratic families only (see DESIGN.md)"
+        return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Family wiring
+# ---------------------------------------------------------------------------
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    if cfg.family in LM_FAMILIES:
+        return ModelBundle(
+            cfg=cfg,
+            specs=transformer.make_lm_specs(cfg),
+            loss_fn=lambda p, b: transformer.lm_loss(cfg, p, b),
+            prefill_fn=lambda p, b, c: transformer.lm_prefill(cfg, p, b, c),
+            decode_fn=lambda p, c, t, pos: transformer.lm_decode_step(
+                cfg, p, c, t, pos),
+            init_cache=lambda bsz, ml: transformer.init_lm_cache(cfg, bsz, ml),
+            cache_axes=lambda: transformer.lm_cache_axes(cfg),
+        )
+    if cfg.family == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            specs=rglru.make_griffin_specs(cfg),
+            loss_fn=lambda p, b: rglru.griffin_loss(cfg, p, b),
+            prefill_fn=lambda p, b, c: rglru.griffin_prefill(cfg, p, b, c),
+            decode_fn=lambda p, c, t, pos: rglru.griffin_decode_step(
+                cfg, p, c, t, pos),
+            init_cache=lambda bsz, ml: rglru.init_griffin_state(cfg, bsz, ml),
+            cache_axes=lambda: rglru.griffin_state_axes(cfg),
+        )
+    if cfg.family == "ssm":
+        return ModelBundle(
+            cfg=cfg,
+            specs=xlstm.make_xlstm_specs(cfg),
+            loss_fn=lambda p, b: xlstm.xlstm_loss(cfg, p, b),
+            prefill_fn=lambda p, b, c: xlstm.xlstm_prefill(cfg, p, b, c),
+            decode_fn=lambda p, c, t, pos: xlstm.xlstm_decode_step(
+                cfg, p, c, t, pos),
+            init_cache=lambda bsz, ml: xlstm.init_xlstm_state(cfg, bsz, ml),
+            cache_axes=lambda: xlstm.xlstm_state_axes(cfg),
+        )
+    if cfg.family == "audio":
+        return ModelBundle(
+            cfg=cfg,
+            specs=encdec.make_whisper_specs(cfg),
+            loss_fn=lambda p, b: encdec.whisper_loss(cfg, p, b),
+            prefill_fn=lambda p, b, c: encdec.whisper_prefill(cfg, p, b, c),
+            decode_fn=lambda p, c, t, pos: encdec.whisper_decode_step(
+                cfg, p, c, t, pos),
+            init_cache=lambda bsz, ml: encdec.init_whisper_cache(cfg, bsz, ml),
+            cache_axes=lambda: encdec.whisper_cache_axes(cfg),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,304 @@
+"""Decoder-only LM covering the dense, MoE and VLM families.
+
+The layer stack is homogeneous and executed with ``jax.lax.scan`` over
+parameters stacked along a leading ``layers`` dimension: the lowered HLO
+contains a single layer body regardless of depth, which keeps 512-way GSPMD
+compiles tractable and is the standard production pattern (MaxText et al.).
+
+Remat (activation checkpointing) wraps the scanned body; the policy is a
+config knob so the §Perf iterations can trade recompute for memory.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (
+    ModelConfig,
+    ParamSpec,
+    maybe_remat,
+    rms_norm,
+    shard,
+    softmax_cross_entropy,
+    stack_specs,
+)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def make_layer_specs(cfg: ModelConfig) -> dict[str, Any]:
+    specs: dict[str, Any] = {
+        "ln_attn": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ln_mlp": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn.make_attn_specs(cfg),
+    }
+    if cfg.family == "moe":
+        specs["moe"] = mlp_mod.make_moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_mod.make_mlp_specs(cfg)
+    return specs
+
+
+def make_lm_specs(cfg: ModelConfig) -> dict[str, Any]:
+    vp = cfg.padded_vocab
+    specs: dict[str, Any] = {
+        "embedding": ParamSpec((vp, cfg.d_model), ("vocab", "embed")),
+        "layers": stack_specs(make_layer_specs(cfg), cfg.num_layers),
+        "ln_final": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, vp), ("embed", "vocab"))
+    if cfg.family == "vlm":
+        specs["mm_projector"] = ParamSpec(
+            (cfg.d_model, cfg.d_model), ("embed", "embed_out"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer body
+# ---------------------------------------------------------------------------
+
+def _layer_forward(cfg: ModelConfig, p: dict[str, Any], x: jax.Array,
+                   positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Pre-norm block. Returns (x, aux_loss)."""
+    rm = cfg.residual_multiplier
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    a = attn.attn_forward(cfg, p["attn"], h, positions, causal=True)
+    x = x + rm * a
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        m, aux = mlp_mod.moe_forward(cfg, p["moe"], h)
+    else:
+        m = mlp_mod.mlp_forward(cfg, p["mlp"], h)
+    x = x + rm * m
+    x = shard(x, "batch", "act_seq", None)
+    return x, aux
+
+
+def _stack_forward(cfg: ModelConfig, params: dict[str, Any], x: jax.Array,
+                   positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    def body(carry, layer_params):
+        h, aux = carry
+        h, a = _layer_forward(cfg, layer_params, h, positions)
+        return (h, aux + a), None
+
+    body = maybe_remat(body, cfg.remat_policy)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.unroll_layers:
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            carry, _ = body(carry, lp)
+        return carry
+    (x, aux), _ = lax.scan(body, carry, params["layers"])
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params: dict[str, Any], tokens: jax.Array
+                 ) -> jax.Array:
+    emb = params["embedding"].astype(cfg.activation_dtype)
+    x = jnp.take(emb, tokens, axis=0)
+    return x * cfg.embedding_multiplier
+
+
+def lm_logits(cfg: ModelConfig, params: dict[str, Any], x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["ln_final"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = shard(logits, "batch", "act_seq", "vocab_sharded")
+    if cfg.logits_scaling != 1.0:
+        logits = logits / cfg.logits_scaling
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Full forward / loss
+# ---------------------------------------------------------------------------
+
+def _maybe_prepend_patches(cfg: ModelConfig, params: dict[str, Any],
+                           x: jax.Array, batch: dict[str, jax.Array]):
+    """VLM family: prepend (projected) precomputed patch embeddings (stub)."""
+    if cfg.family != "vlm":
+        return x
+    patches = batch["patches"].astype(x.dtype)          # (B, P, D) stub
+    proj = jnp.einsum("bpd,de->bpe", patches,
+                      params["mm_projector"].astype(x.dtype))
+    return jnp.concatenate([proj, x], axis=1)
+
+
+def lm_forward(cfg: ModelConfig, params: dict[str, Any],
+               batch: dict[str, jax.Array]) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits over the text region, aux_loss)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    x = _maybe_prepend_patches(cfg, params, x, batch)
+    x = shard(x, "batch", "act_seq", None)
+    s_total = x.shape[1]
+    positions = jnp.arange(s_total, dtype=jnp.int32)
+    x, aux = _stack_forward(cfg, params, x, positions)
+    if cfg.family == "vlm":
+        x = x[:, cfg.num_patches:]                       # loss on text only
+    logits = lm_logits(cfg, params, x)
+    return logits, aux
+
+
+def _chunked_ce(cfg: ModelConfig, params: dict[str, Any], x: jax.Array,
+                labels: jax.Array, mask: jax.Array | None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Streamed CE: logits are computed per sequence chunk under remat so
+    the (B, S, Vp) fp32 tensor never exists — a large live-memory and
+    bytes-accessed win for big-vocab models."""
+    b, s, d = x.shape
+    c = min(cfg.ce_chunk, s)
+    while s % c:
+        c //= 2
+    n = s // c
+    xc = x.reshape(b, n, c, d).swapaxes(0, 1)           # (n, B, c, D)
+    lc = labels.reshape(b, n, c).swapaxes(0, 1)
+    mc = (mask.reshape(b, n, c).swapaxes(0, 1)
+          if mask is not None else None)
+
+    def chunk_loss(args):
+        xi, li, mi = args
+        logits = lm_logits(cfg, params, xi)
+        loss, denom = softmax_cross_entropy(logits, li, mi, cfg.vocab_size)
+        return loss * denom, denom                       # un-normalised sum
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    def body(carry, args):
+        tot, den = carry
+        ls, dn = chunk_loss(args)
+        return (tot + ls, den + dn), None
+
+    ms = mc if mc is not None else jnp.ones((n, b, c), jnp.float32)
+    (tot, den), _ = lax.scan(body, (jnp.zeros((), jnp.float32),
+                                    jnp.zeros((), jnp.float32)),
+                             (xc, lc, ms))
+    return tot / jnp.maximum(den, 1.0), den
+
+
+def lm_loss(cfg: ModelConfig, params: dict[str, Any],
+            batch: dict[str, jax.Array]) -> tuple[jax.Array, dict[str, jax.Array]]:
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if cfg.ce_chunk:
+        tokens = batch["tokens"]
+        x = embed_tokens(cfg, params, tokens)
+        x = _maybe_prepend_patches(cfg, params, x, batch)
+        x = shard(x, "batch", "act_seq", None)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x, aux = _stack_forward(cfg, params, x, positions)
+        if cfg.family == "vlm":
+            x = x[:, cfg.num_patches:]
+        loss, denom = _chunked_ce(cfg, params, x, labels, mask)
+    else:
+        logits, aux = lm_forward(cfg, params, batch)
+        loss, denom = softmax_cross_entropy(logits, labels, mask,
+                                            cfg.vocab_size)
+    total = loss + 0.01 * aux
+    return total, {"ce_loss": loss, "aux_loss": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict[str, Any]:
+    return attn.init_kv_cache(cfg, batch, max_len, layers=cfg.num_layers)
+
+
+def lm_cache_axes(cfg: ModelConfig) -> dict[str, Any]:
+    return attn.kv_cache_axes(cfg, layers=True)
+
+
+def lm_prefill(cfg: ModelConfig, params: dict[str, Any],
+               batch: dict[str, jax.Array], cache: dict[str, Any]
+               ) -> tuple[jax.Array, dict[str, Any]]:
+    """Run the prompt through the stack, filling the cache.
+
+    Returns (last-position logits, cache).
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    x = _maybe_prepend_patches(cfg, params, x, batch)
+    x = shard(x, "batch", "act_seq", None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        layer_params, layer_cache = xs
+        hn = rms_norm(h, layer_params["ln_attn"], cfg.norm_eps)
+        a, new_cache = attn.prefill_into_cache(
+            cfg, layer_params["attn"], hn, positions, layer_cache)
+        h = h + cfg.residual_multiplier * a
+        hn = rms_norm(h, layer_params["ln_mlp"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = mlp_mod.moe_forward(cfg, layer_params["moe"], hn)
+        else:
+            m = mlp_mod.mlp_forward(cfg, layer_params["mlp"], hn)
+        h = h + cfg.residual_multiplier * m
+        h = shard(h, "batch", "act_seq", None)
+        return h, new_cache
+
+    body = maybe_remat(body, cfg.remat_policy)
+    if cfg.unroll_layers:
+        new_layers = []
+        for i in range(cfg.num_layers):
+            xs = jax.tree.map(lambda t: t[i], (params["layers"], cache))
+            x, nc = body(x, xs)
+            new_layers.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *new_layers)
+    else:
+        x, new_cache = lax.scan(body, x, (params["layers"], cache))
+    logits = lm_logits(cfg, params, x[:, -1:])
+    return logits, new_cache
+
+
+def lm_decode_step(cfg: ModelConfig, params: dict[str, Any],
+                   cache: dict[str, Any], tokens: jax.Array, pos: jax.Array
+                   ) -> tuple[jax.Array, dict[str, Any]]:
+    """One decode step. tokens: (B, 1); pos: scalar current position."""
+    x = embed_tokens(cfg, params, tokens)
+    x = shard(x, "batch", None, None)
+
+    def body(h, xs):
+        layer_params, layer_cache = xs
+        hn = rms_norm(h, layer_params["ln_attn"], cfg.norm_eps)
+        a, new_cache = attn.attn_decode(cfg, layer_params["attn"], hn,
+                                        layer_cache, pos)
+        h = h + cfg.residual_multiplier * a
+        hn = rms_norm(h, layer_params["ln_mlp"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = mlp_mod.moe_forward(cfg, layer_params["moe"], hn)
+        else:
+            m = mlp_mod.mlp_forward(cfg, layer_params["mlp"], hn)
+        h = h + cfg.residual_multiplier * m
+        return h, new_cache
+
+    if cfg.unroll_layers:
+        new_layers = []
+        for i in range(cfg.num_layers):
+            xs = jax.tree.map(lambda t: t[i], (params["layers"], cache))
+            x, nc = body(x, xs)
+            new_layers.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *new_layers)
+    else:
+        x, new_cache = lax.scan(body, x, (params["layers"], cache))
+    logits = lm_logits(cfg, params, x)
+    return logits, new_cache

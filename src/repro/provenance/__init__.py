@@ -1,0 +1,8 @@
+from repro.provenance.store import (  # noqa: F401
+    LinkType,
+    NodeType,
+    ProvenanceStore,
+    QueryBuilder,
+    configure_store,
+    current_store,
+)

@@ -1,0 +1,358 @@
+"""The provenance graph store (paper §I, §III.B.1).
+
+AiiDA uses PostgreSQL; the storage backend here is sqlite (stdlib) behind
+the same narrow API, with WAL journaling so that multiple daemon workers
+(OS processes) can share one database file. Swapping in Postgres means
+reimplementing the ~10 SQL statements in this file.
+
+Graph model:
+  nodes  — data values and process executions (CalcFunctionNode,
+           WorkFunctionNode, WorkChainNode, CalcJobNode, DataNode …)
+  links  — typed, labelled edges: INPUT_CALC/INPUT_WORK (data -> process),
+           CREATE (calc -> data), RETURN (work -> data),
+           CALL_CALC/CALL_WORK (workflow -> subprocess)
+  logs   — the WorkChain.report() records (REPORT log level), attached to
+           their emitting process node
+"""
+
+from __future__ import annotations
+
+import enum
+import json
+import os
+import sqlite3
+import threading
+import time
+import uuid as uuid_mod
+from typing import TYPE_CHECKING, Any, Iterable
+
+if TYPE_CHECKING:  # imported lazily at runtime (core <-> provenance cycle)
+    from repro.core.datatypes import DataValue
+
+
+class NodeType(str, enum.Enum):
+    DATA = "data"
+    CALC_FUNCTION = "process.calcfunction"
+    WORK_FUNCTION = "process.workfunction"
+    WORK_CHAIN = "process.workchain"
+    CALC_JOB = "process.calcjob"
+    PROCESS = "process.process"
+
+    @property
+    def is_process(self) -> bool:
+        return self.value.startswith("process")
+
+
+class LinkType(str, enum.Enum):
+    INPUT_CALC = "input_calc"
+    INPUT_WORK = "input_work"
+    CREATE = "create"
+    RETURN = "return"
+    CALL_CALC = "call_calc"
+    CALL_WORK = "call_work"
+
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS nodes (
+    pk INTEGER PRIMARY KEY AUTOINCREMENT,
+    uuid TEXT UNIQUE NOT NULL,
+    node_type TEXT NOT NULL,
+    process_type TEXT,
+    label TEXT DEFAULT '',
+    description TEXT DEFAULT '',
+    attributes TEXT DEFAULT '{}',
+    payload TEXT,
+    process_state TEXT,
+    exit_status INTEGER,
+    exit_message TEXT,
+    checkpoint TEXT,
+    ctime REAL NOT NULL,
+    mtime REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS links (
+    pk INTEGER PRIMARY KEY AUTOINCREMENT,
+    in_id INTEGER NOT NULL REFERENCES nodes(pk),
+    out_id INTEGER NOT NULL REFERENCES nodes(pk),
+    link_type TEXT NOT NULL,
+    label TEXT NOT NULL
+);
+CREATE TABLE IF NOT EXISTS logs (
+    pk INTEGER PRIMARY KEY AUTOINCREMENT,
+    node_id INTEGER NOT NULL REFERENCES nodes(pk),
+    levelname TEXT NOT NULL,
+    message TEXT NOT NULL,
+    time REAL NOT NULL
+);
+CREATE INDEX IF NOT EXISTS idx_links_in ON links(in_id);
+CREATE INDEX IF NOT EXISTS idx_links_out ON links(out_id);
+CREATE INDEX IF NOT EXISTS idx_nodes_type ON nodes(node_type);
+CREATE INDEX IF NOT EXISTS idx_nodes_state ON nodes(process_state);
+"""
+
+
+class ProvenanceStore:
+    def __init__(self, path: str = ":memory:"):
+        self.path = path
+        self._local = threading.local()
+        self._lock = threading.RLock()
+        if path != ":memory:":
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        self._conn().executescript(_SCHEMA)
+        self._conn().commit()
+
+    # -- connection handling (per-thread) -------------------------------------
+    def _conn(self) -> sqlite3.Connection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = sqlite3.connect(self.path, timeout=30.0)
+            conn.row_factory = sqlite3.Row
+            conn.execute("PRAGMA journal_mode=WAL")
+            conn.execute("PRAGMA busy_timeout=30000")
+            conn.execute("PRAGMA synchronous=NORMAL")
+            self._local.conn = conn
+        return conn
+
+    def close(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            conn.close()
+            self._local.conn = None
+
+    # -- node creation -----------------------------------------------------------
+    def store_data(self, value: "DataValue", label: str = "") -> "DataValue":
+        """Persist a DataValue; idempotent if already stored."""
+        if value.is_stored:
+            return value
+        now = time.time()
+        u = str(uuid_mod.uuid4())
+        with self._lock:
+            cur = self._conn().execute(
+                "INSERT INTO nodes (uuid, node_type, label, payload, ctime,"
+                " mtime) VALUES (?,?,?,?,?,?)",
+                (u, NodeType.DATA.value, label,
+                 json.dumps(value.to_payload()), now, now))
+            self._conn().commit()
+        value.pk = cur.lastrowid
+        value.uuid = u
+        return value
+
+    def create_process_node(self, node_type: NodeType, process_type: str,
+                            label: str = "", description: str = "",
+                            attributes: dict | None = None) -> int:
+        now = time.time()
+        u = str(uuid_mod.uuid4())
+        with self._lock:
+            cur = self._conn().execute(
+                "INSERT INTO nodes (uuid, node_type, process_type, label,"
+                " description, attributes, process_state, ctime, mtime)"
+                " VALUES (?,?,?,?,?,?,?,?,?)",
+                (u, node_type.value, process_type, label, description,
+                 json.dumps(attributes or {}), "created", now, now))
+            self._conn().commit()
+        return cur.lastrowid
+
+    # -- node updates ----------------------------------------------------------
+    def update_process(self, pk: int, *, state: str | None = None,
+                       exit_status: int | None = None,
+                       exit_message: str | None = None,
+                       attributes: dict | None = None) -> None:
+        sets, vals = ["mtime=?"], [time.time()]
+        if state is not None:
+            sets.append("process_state=?")
+            vals.append(state)
+        if exit_status is not None:
+            sets.append("exit_status=?")
+            vals.append(exit_status)
+        if exit_message is not None:
+            sets.append("exit_message=?")
+            vals.append(exit_message)
+        if attributes is not None:
+            sets.append("attributes=?")
+            vals.append(json.dumps(attributes))
+        vals.append(pk)
+        with self._lock:
+            self._conn().execute(
+                f"UPDATE nodes SET {', '.join(sets)} WHERE pk=?", vals)
+            self._conn().commit()
+
+    def save_checkpoint(self, pk: int, checkpoint: dict) -> None:
+        with self._lock:
+            self._conn().execute(
+                "UPDATE nodes SET checkpoint=?, mtime=? WHERE pk=?",
+                (json.dumps(checkpoint), time.time(), pk))
+            self._conn().commit()
+
+    def load_checkpoint(self, pk: int) -> dict | None:
+        row = self._conn().execute(
+            "SELECT checkpoint FROM nodes WHERE pk=?", (pk,)).fetchone()
+        if row is None or row["checkpoint"] is None:
+            return None
+        return json.loads(row["checkpoint"])
+
+    def delete_checkpoint(self, pk: int) -> None:
+        with self._lock:
+            self._conn().execute(
+                "UPDATE nodes SET checkpoint=NULL WHERE pk=?", (pk,))
+            self._conn().commit()
+
+    # -- links -------------------------------------------------------------------
+    def add_link(self, in_pk: int, out_pk: int, link_type: LinkType,
+                 label: str) -> None:
+        with self._lock:
+            self._conn().execute(
+                "INSERT INTO links (in_id, out_id, link_type, label)"
+                " VALUES (?,?,?,?)", (in_pk, out_pk, link_type.value, label))
+            self._conn().commit()
+
+    # -- logs ----------------------------------------------------------------------
+    def add_log(self, node_pk: int, levelname: str, message: str) -> None:
+        with self._lock:
+            self._conn().execute(
+                "INSERT INTO logs (node_id, levelname, message, time)"
+                " VALUES (?,?,?,?)", (node_pk, levelname, message, time.time()))
+            self._conn().commit()
+
+    def get_logs(self, node_pk: int) -> list[dict]:
+        rows = self._conn().execute(
+            "SELECT levelname, message, time FROM logs WHERE node_id=?"
+            " ORDER BY pk", (node_pk,)).fetchall()
+        return [dict(r) for r in rows]
+
+    # -- reads -----------------------------------------------------------------------
+    def get_node(self, pk: int) -> dict | None:
+        row = self._conn().execute(
+            "SELECT * FROM nodes WHERE pk=?", (pk,)).fetchone()
+        return dict(row) if row else None
+
+    def load_data(self, pk: int) -> "DataValue":
+        from repro.core.datatypes import DataValue
+
+        node = self.get_node(pk)
+        if node is None or node["node_type"] != NodeType.DATA.value:
+            raise KeyError(f"no data node with pk={pk}")
+        value = DataValue.from_payload(json.loads(node["payload"]))
+        value.pk = pk
+        value.uuid = node["uuid"]
+        return value
+
+    def incoming(self, pk: int, link_type: LinkType | None = None
+                 ) -> list[tuple[int, str, str]]:
+        q = "SELECT in_id, link_type, label FROM links WHERE out_id=?"
+        args: list[Any] = [pk]
+        if link_type:
+            q += " AND link_type=?"
+            args.append(link_type.value)
+        return [(r["in_id"], r["link_type"], r["label"])
+                for r in self._conn().execute(q, args)]
+
+    def outgoing(self, pk: int, link_type: LinkType | None = None
+                 ) -> list[tuple[int, str, str]]:
+        q = "SELECT out_id, link_type, label FROM links WHERE in_id=?"
+        args: list[Any] = [pk]
+        if link_type:
+            q += " AND link_type=?"
+            args.append(link_type.value)
+        return [(r["out_id"], r["link_type"], r["label"])
+                for r in self._conn().execute(q, args)]
+
+    def count_nodes(self, node_type: NodeType | None = None) -> int:
+        if node_type is None:
+            return self._conn().execute(
+                "SELECT COUNT(*) c FROM nodes").fetchone()["c"]
+        return self._conn().execute(
+            "SELECT COUNT(*) c FROM nodes WHERE node_type=?",
+            (node_type.value,)).fetchone()["c"]
+
+    def unfinished_processes(self) -> list[dict]:
+        rows = self._conn().execute(
+            "SELECT * FROM nodes WHERE node_type LIKE 'process%' AND"
+            " process_state NOT IN ('finished','excepted','killed')"
+        ).fetchall()
+        return [dict(r) for r in rows]
+
+
+class QueryBuilder:
+    """Minimal, composable query interface over the provenance graph —
+    the criterion-(iv) 'easily queryable' surface."""
+
+    def __init__(self, store: ProvenanceStore):
+        self.store = store
+        self._wheres: list[str] = []
+        self._args: list[Any] = []
+        self._order = "pk"
+        self._limit: int | None = None
+
+    def nodes(self, node_type: NodeType | str | None = None) -> "QueryBuilder":
+        if node_type is not None:
+            t = node_type.value if isinstance(node_type, NodeType) else node_type
+            self._wheres.append("node_type LIKE ?")
+            self._args.append(f"{t}%")
+        return self
+
+    def with_state(self, state: str) -> "QueryBuilder":
+        self._wheres.append("process_state=?")
+        self._args.append(state)
+        return self
+
+    def with_exit_status(self, status: int) -> "QueryBuilder":
+        self._wheres.append("exit_status=?")
+        self._args.append(status)
+        return self
+
+    def with_label(self, label: str) -> "QueryBuilder":
+        self._wheres.append("label=?")
+        self._args.append(label)
+        return self
+
+    def created_after(self, ts: float) -> "QueryBuilder":
+        self._wheres.append("ctime>=?")
+        self._args.append(ts)
+        return self
+
+    def order_by(self, field: str, desc: bool = False) -> "QueryBuilder":
+        assert field in ("pk", "ctime", "mtime")
+        self._order = field + (" DESC" if desc else "")
+        return self
+
+    def limit(self, n: int) -> "QueryBuilder":
+        self._limit = n
+        return self
+
+    def all(self) -> list[dict]:
+        q = "SELECT * FROM nodes"
+        if self._wheres:
+            q += " WHERE " + " AND ".join(self._wheres)
+        q += f" ORDER BY {self._order}"
+        if self._limit:
+            q += f" LIMIT {self._limit}"
+        return [dict(r) for r in self.store._conn().execute(q, self._args)]
+
+    def count(self) -> int:
+        q = "SELECT COUNT(*) c FROM nodes"
+        if self._wheres:
+            q += " WHERE " + " AND ".join(self._wheres)
+        return self.store._conn().execute(q, self._args).fetchone()["c"]
+
+    def first(self) -> dict | None:
+        res = self.limit(1).all()
+        return res[0] if res else None
+
+
+# ---------------------------------------------------------------------------
+# Global store configuration (one per python instance, like AiiDA profiles)
+# ---------------------------------------------------------------------------
+
+_STORE: ProvenanceStore | None = None
+
+
+def configure_store(path: str = ":memory:") -> ProvenanceStore:
+    global _STORE
+    _STORE = ProvenanceStore(path)
+    return _STORE
+
+
+def current_store() -> ProvenanceStore:
+    global _STORE
+    if _STORE is None:
+        _STORE = ProvenanceStore(":memory:")
+    return _STORE

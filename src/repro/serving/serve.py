@@ -1,0 +1,106 @@
+"""Serving steps: prefill and single-token decode (greedy), plus a simple
+continuous-batching request scheduler used by examples/serve_lm.py.
+
+``make_decode_step`` is what the dry-run lowers for ``decode_*`` and
+``long_*`` cells (one new token against a seq_len-deep KV cache)."""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelBundle
+
+
+def make_prefill_step(bundle: ModelBundle) -> Callable:
+    def prefill_step(params, batch, cache):
+        logits, cache = bundle.prefill_fn(params, batch, cache)
+        next_tok = jnp.argmax(logits[:, -1, :bundle.cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], cache
+
+    return prefill_step
+
+
+def make_decode_step(bundle: ModelBundle) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = bundle.decode_fn(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1, :bundle.cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Minimal continuous-batching scheduler (host-side)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchScheduler:
+    """Greedy slot-based continuous batching over a fixed decode batch."""
+
+    def __init__(self, bundle: ModelBundle, params: Any, batch_size: int,
+                 max_len: int, eos_id: int = -1):
+        self.bundle = bundle
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * batch_size
+        self.decode_step = jax.jit(make_decode_step(bundle), donate_argnums=(1,))
+        self.cache = bundle.init_cache(batch_size, max_len)
+        self.tokens = jnp.zeros((batch_size, 1), jnp.int32)
+        self.pos = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if (slot is None or slot.done) and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                # naive: feed prompt tokens one at a time via decode steps
+                toks = self.tokens.at[i, 0].set(req.prompt[0])
+                self.tokens = toks
+                req.generated = []
+
+    def step(self) -> list[Request]:
+        """One decode step across all active slots; returns finished reqs."""
+        self._fill_slots()
+        if all(s is None for s in self.slots):
+            return []
+        next_tok, self.cache = self.decode_step(
+            self.params, self.cache, self.tokens, jnp.asarray(self.pos))
+        self.pos += 1
+        next_host = jax.device_get(next_tok)[:, 0].tolist()
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            consumed = 1 + self.pos  # prompt feeding progress (approximate)
+            if len(req.generated) < len(req.prompt) - 1:
+                # still feeding the prompt teacher-forced
+                req.generated.append(req.prompt[min(len(req.generated) + 1,
+                                                    len(req.prompt) - 1)])
+            else:
+                req.generated.append(int(next_host[i]))
+            del consumed
+            self.tokens = self.tokens.at[i, 0].set(req.generated[-1])
+            if (len(req.generated) >= len(req.prompt) - 1 + req.max_new_tokens
+                    or req.generated[-1] == self.eos_id):
+                req.done = True
+                finished.append(req)
+        return finished

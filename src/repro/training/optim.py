@@ -1,0 +1,166 @@
+"""Optimizers in pure JAX: AdamW (default) and Adafactor (memory-lean
+alternative for the largest models). Both operate on arbitrary pytrees and
+inherit the parameter PartitionSpecs, so optimizer state shards exactly like
+the parameters (FSDP-compatible)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptimConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio. Warmup counts from 1
+    so the very first step has a non-zero learning rate."""
+    step = step.astype(jnp.float32) + 1.0
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: Any) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params)}
+
+
+def adamw_update(cfg: OptimConfig, grads: Any, opt_state: dict[str, Any],
+                 params: Any, step: jax.Array):
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu_n = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+        nu_n = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+        mu_hat = mu_n / bc1
+        nu_hat = nu_n / bc2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        p_n = p.astype(jnp.float32) - lr * delta
+        return p_n.astype(p.dtype), mu_n.astype(mu.dtype), nu_n.astype(nu.dtype)
+
+    out = jax.tree.map(upd, grads, opt_state["mu"], opt_state["nu"], params)
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t3: t3[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t3: t3[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t3: t3[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu}, lr
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; for the 314B-class cells)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params: Any) -> dict[str, Any]:
+    def row_col(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"fac": jax.tree.map(row_col, params)}
+
+
+def adafactor_update(cfg: OptimConfig, grads: Any, opt_state: dict[str, Any],
+                     params: Any, step: jax.Array):
+    lr = lr_schedule(cfg, step)
+    beta2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, st, p):
+        g32 = g.astype(jnp.float32)
+        sq = jnp.square(g32) + 1e-30
+        if p.ndim >= 2:
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(sq, axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(sq, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., :, None] * vc[..., None, :] /
+                jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], 1e-30))
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * sq
+            denom = jnp.sqrt(v)
+            new_st = {"v": v}
+        update = g32 / jnp.maximum(denom, 1e-30)
+        update = update / jnp.maximum(1.0, global_norm(update) /
+                                      (update.size ** 0.5))
+        p_n = p.astype(jnp.float32) - lr * (update +
+                                            cfg.weight_decay * p.astype(jnp.float32))
+        return p_n.astype(p.dtype), new_st
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = td.flatten_up_to(grads)
+    flat_s = td.flatten_up_to(opt_state["fac"])
+    outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = td.unflatten([o[0] for o in outs])
+    new_fac = td.unflatten([o[1] for o in outs])
+    return new_params, {"fac": new_fac}, lr
+
+
+def opt_init(cfg: OptimConfig, params: Any) -> dict[str, Any]:
+    return adamw_init(params) if cfg.name == "adamw" else adafactor_init(params)
+
+
+def opt_update(cfg: OptimConfig, grads, opt_state, params, step):
+    if cfg.name == "adamw":
+        return adamw_update(cfg, grads, opt_state, params, step)
+    return adafactor_update(cfg, grads, opt_state, params, step)
+
+
+def opt_state_axes(cfg: OptimConfig, param_axes: Any) -> dict[str, Any]:
+    """Logical axes for optimizer state (mirror params; factored state drops
+    the last / second-to-last dim respectively)."""
+    if cfg.name == "adamw":
+        return {"mu": param_axes, "nu": param_axes}
+
+    def fac_axes(ax):
+        if len(ax) >= 2:
+            return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2] + ax[-1:])}
+        return {"v": tuple(ax)}
+
+    return {"fac": jax.tree.map(
+        fac_axes, param_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(e, str) or e is None for e in x))}

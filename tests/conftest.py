@@ -1,0 +1,27 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture()
+def store():
+    """Fresh in-memory provenance store + default runner per test."""
+    from repro.engine.runner import set_default_runner
+    from repro.provenance.store import configure_store
+
+    st = configure_store(":memory:")
+    set_default_runner(None)
+    yield st
+    set_default_runner(None)
+
+
+@pytest.fixture()
+def runner(store):
+    from repro.engine.runner import Runner, set_default_runner
+
+    r = Runner(store=store)
+    set_default_runner(r)
+    yield r

@@ -1,0 +1,58 @@
+"""CLI smoke tests (the verdi role)."""
+
+import os
+
+import pytest
+
+from repro import cli
+from repro.core import Int, calcfunction
+from repro.engine.runner import Runner, set_default_runner
+from repro.provenance.store import configure_store
+
+
+@pytest.fixture()
+def profile(tmp_path):
+    db = str(tmp_path / "profile.db")
+    store = configure_store(db)
+    set_default_runner(Runner(store=store))
+
+    @calcfunction
+    def add(a, b):
+        return a + b
+
+    add(Int(1), Int(2))
+    store.close()
+    set_default_runner(None)
+    return db
+
+
+def test_process_list(profile, capsys):
+    cli.main(["-p", profile, "process", "list"])
+    out = capsys.readouterr().out
+    assert "add" in out and "finished" in out
+
+
+def test_process_report_and_show(profile, capsys):
+    cli.main(["-p", profile, "process", "list"])
+    capsys.readouterr()
+    cli.main(["-p", profile, "process", "report", "1"])
+    out = capsys.readouterr().out
+    assert "add<1>" in out
+    cli.main(["-p", profile, "process", "show", "1"])
+    out = capsys.readouterr().out
+    assert "input_calc" in out and "create" in out
+
+
+def test_graph_export(profile, tmp_path, capsys):
+    out_file = str(tmp_path / "g.dot")
+    cli.main(["-p", profile, "graph", "export", "1", "--out", out_file])
+    content = open(out_file).read()
+    assert content.startswith("digraph provenance")
+    assert "n1" in content and "->" in content
+
+
+def test_stats(profile, capsys):
+    cli.main(["-p", profile, "stats"])
+    out = capsys.readouterr().out
+    assert "process.calcfunction" in out
+    assert "unfinished processes: 0" in out

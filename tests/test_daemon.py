@@ -1,0 +1,70 @@
+"""Daemon integration: durable broker, multi-process workers, crash
+recovery (paper §III.A.1 + §III.C.a). Slower than unit tests but the
+core fault-tolerance claims live here."""
+
+import sys
+import time
+
+import pytest
+
+from repro.calcjobs import TPUTrainJob
+from repro.core import Dict
+from repro.engine.daemon import Daemon
+from repro.provenance.store import configure_store
+
+TERMINAL = ("finished", "excepted", "killed")
+SMALL = {"arch": "qwen2-0.5b", "steps": 1, "batch": 1, "seq": 8}
+
+
+def _wait_all(daemon, store, pks, timeout=150, supervise=True,
+              heal_after=None):
+    t0 = time.time()
+    restarts = 0
+    while time.time() - t0 < timeout:
+        states = {pk: (store.get_node(pk) or {}).get("process_state")
+                  for pk in pks}
+        if all(s in TERMINAL for s in states.values()):
+            return states, restarts
+        if supervise:
+            r = daemon.supervise()
+            restarts += r
+            if heal_after is not None and restarts >= heal_after:
+                daemon.crash_after = None
+        time.sleep(0.4)
+    return states, restarts
+
+
+@pytest.mark.slow
+def test_daemon_processes_jobs(tmp_path):
+    daemon = Daemon(str(tmp_path), workers=2, slots=8)
+    daemon.start()
+    try:
+        pks = [daemon.submit(TPUTrainJob,
+                             {"config": Dict({**SMALL, "seed": i})})
+               for i in range(3)]
+        store = configure_store(daemon.store_path)
+        states, _ = _wait_all(daemon, store, pks)
+        assert all(s == "finished" for s in states.values()), states
+        assert all(store.get_node(pk)["exit_status"] == 0 for pk in pks)
+    finally:
+        daemon.stop()
+
+
+@pytest.mark.slow
+def test_daemon_worker_crash_recovery(tmp_path):
+    """Workers hard-exit mid-job; the broker requeues their tasks; the
+    supervisor restarts workers; jobs finish from their checkpoints."""
+    daemon = Daemon(str(tmp_path), workers=2, slots=8, crash_after=1.5)
+    daemon.start()
+    try:
+        pks = [daemon.submit(TPUTrainJob,
+                             {"config": Dict({**SMALL, "seed": i})})
+               for i in range(3)]
+        store = configure_store(daemon.store_path)
+        states, restarts = _wait_all(daemon, store, pks, timeout=200,
+                                     heal_after=4)
+        assert restarts > 0, "no worker crashes were injected"
+        assert all(s == "finished" for s in states.values()), states
+        assert all(store.get_node(pk)["exit_status"] == 0 for pk in pks)
+    finally:
+        daemon.stop()

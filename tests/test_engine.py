@@ -1,0 +1,220 @@
+"""Engine machinery: backoff, transport queue, job manager bundling,
+communicator task-queue semantics (paper §II.B.4, §III.C)."""
+
+import asyncio
+
+import pytest
+
+from repro.engine.backoff import TransportTaskExhausted, \
+    exponential_backoff_retry
+from repro.engine.communicator import LocalCommunicator
+from repro.engine.jobmanager import JobManager
+from repro.engine.transport import (
+    FlakyTransport, LocalTransport, TransportQueue,
+)
+from repro.calcjobs.scheduler import SimScheduler, SimulatedCluster
+
+
+def run(coro):
+    loop = asyncio.new_event_loop()
+    try:
+        return loop.run_until_complete(coro)
+    finally:
+        loop.close()
+
+
+# ---------------------------------------------------------------------------
+# exponential backoff
+# ---------------------------------------------------------------------------
+
+def test_backoff_retries_until_success():
+    attempts = []
+    sleeps = []
+
+    async def flaky():
+        attempts.append(1)
+        if len(attempts) < 4:
+            raise ConnectionError("nope")
+        return "ok"
+
+    async def fake_sleep(dt):
+        sleeps.append(dt)
+
+    result = run(exponential_backoff_retry(
+        flaky, initial_interval=0.1, max_attempts=5, sleeper=fake_sleep))
+    assert result == "ok"
+    assert len(attempts) == 4
+    # intervals double: 0.1, 0.2, 0.4
+    assert sleeps == [0.1, 0.2, pytest.approx(0.4)]
+
+
+def test_backoff_exhaustion_raises():
+    async def always_fails():
+        raise TimeoutError("down")
+
+    async def fake_sleep(dt):
+        pass
+
+    with pytest.raises(TransportTaskExhausted) as exc:
+        run(exponential_backoff_retry(always_fails, max_attempts=3,
+                                      sleeper=fake_sleep, name="upload"))
+    assert exc.value.attempts == 3
+    assert "upload" in str(exc.value)
+
+
+def test_backoff_non_retryable_propagates():
+    async def fails():
+        raise ValueError("logic bug")
+
+    with pytest.raises(ValueError):
+        run(exponential_backoff_retry(fails, non_retryable=(ValueError,)))
+
+
+# ---------------------------------------------------------------------------
+# transport queue (paper §II.B.4.b)
+# ---------------------------------------------------------------------------
+
+def test_transport_queue_bundles_connections():
+    """N concurrent requests share O(1) connection opens."""
+
+    async def main():
+        tq = TransportQueue(safe_interval=0.01)
+        t = LocalTransport("hpc")
+        tq.register_transport(t)
+
+        async def use():
+            tr = await tq.request_transport("hpc")
+            assert tr.is_open
+            return tr
+
+        await asyncio.gather(*[use() for _ in range(50)])
+        return t.open_count, tq.stats
+
+    opens, stats = run(main())
+    assert stats["requests"] == 50
+    assert opens == 1          # one connection served all 50 requests
+
+
+def test_transport_queue_safe_interval_enforced():
+    import time
+
+    async def main():
+        tq = TransportQueue(safe_interval=0.05)
+        t = LocalTransport("hpc")
+        tq.register_transport(t)
+        tr = await tq.request_transport("hpc")
+        await tr.close()
+        t0 = time.monotonic()
+        tr = await tq.request_transport("hpc")   # must wait out the interval
+        return time.monotonic() - t0
+
+    elapsed = run(main())
+    assert elapsed >= 0.04
+
+
+# ---------------------------------------------------------------------------
+# job manager bundling (paper §II.B.4.c)
+# ---------------------------------------------------------------------------
+
+def test_job_manager_bundles_scheduler_queries():
+    cluster = SimulatedCluster(queue_delay=0.0, runtime=10.0)
+
+    async def main():
+        tq = TransportQueue(safe_interval=0.0)
+        tq.register_transport(cluster.make_transport("hpc"))
+        manager = JobManager(tq, SimScheduler(), "hpc", flush_interval=0.02)
+        # submit 20 jobs directly
+        t = await tq.request_transport("hpc")
+        job_ids = []
+        for i in range(20):
+            t.files[f"s{i}.job"] = b"{}"
+            rc, out, _ = await t.exec_command(f"sbatch s{i}.job")
+            job_ids.append(out.rsplit(" ", 1)[-1])
+        # 20 concurrent status requests -> ONE squeue
+        before = cluster.stats["queries"]
+        states = await asyncio.gather(
+            *[manager.request_job_state(j) for j in job_ids])
+        return cluster.stats["queries"] - before, states
+
+    queries, states = run(main())
+    assert queries == 1
+    assert all(s in ("PENDING", "RUNNING") for s in states)
+
+
+# ---------------------------------------------------------------------------
+# communicator task queue: ack on success, requeue on failure
+# ---------------------------------------------------------------------------
+
+def test_task_queue_requeues_failed_tasks():
+    async def main():
+        comm = LocalCommunicator()
+        seen = []
+
+        async def handler(payload):
+            seen.append(payload["n"])
+            if len(seen) == 1:
+                raise RuntimeError("first delivery fails")
+
+        comm.add_task_subscriber("q", handler)
+        comm.task_send("q", {"n": 7})
+        for _ in range(100):
+            await asyncio.sleep(0.01)
+            if len(seen) >= 2:
+                break
+        comm.close()
+        return seen
+
+    seen = run(main())
+    assert seen == [7, 7]     # redelivered after the nack
+
+
+def test_broadcast_subject_filter():
+    async def main():
+        comm = LocalCommunicator()
+        got = []
+        comm.add_broadcast_subscriber(
+            lambda s, sender, b: got.append(s),
+            subject_filter="state_changed.*")
+        comm.broadcast_send("state_changed.running.finished", 1, {})
+        comm.broadcast_send("unrelated.subject", 1, {})
+        comm.close()
+        return got
+
+    got = run(main())
+    assert got == ["state_changed.running.finished"]
+
+
+def test_rpc_roundtrip():
+    async def main():
+        comm = LocalCommunicator()
+        comm.add_rpc_subscriber("process.1", lambda msg: msg["x"] * 2)
+        res = comm.rpc_send("process.1", {"x": 21})
+        with pytest.raises(KeyError):
+            comm.rpc_send("process.404", {})
+        comm.close()
+        return res
+
+    assert run(main()) == 42
+
+
+# ---------------------------------------------------------------------------
+# flaky transport + full CalcJob integration is in test_calcjob.py
+# ---------------------------------------------------------------------------
+
+def test_flaky_transport_fails_then_recovers():
+    async def main():
+        t = FlakyTransport(fail_first=2)
+        await t.open()
+        with pytest.raises(ConnectionError):
+            await t.put_file("a", b"1")
+        with pytest.raises(ConnectionError):
+            await t.put_file("a", b"1")
+        await t.put_file("a", b"1")
+        # failure budget is per operation kind
+        with pytest.raises(ConnectionError):
+            await t.get_file("a")
+        with pytest.raises(ConnectionError):
+            await t.get_file("a")
+        assert await t.get_file("a") == b"1"
+
+    run(main())

@@ -1,0 +1,229 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mlstm_chunk.ops import mlstm_chunk
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 5e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,hkv,hd", [
+    (1, 64, 4, 4, 32),     # MHA
+    (2, 128, 8, 2, 64),    # GQA 4x
+    (1, 96, 6, 1, 32),     # MQA, non-pow2 seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(b, s, h, hkv, hd, dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, h, hd)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, hd)), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_kv=32)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_local_window(window):
+    b, s, h, hd = 1, 128, 2, 32
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=32, block_kv=32)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+def test_flash_attention_gradients_match_ref():
+    b, s, h, hkv, hd = 1, 64, 4, 2, 32
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, hkv, hd)), jnp.float32)
+
+    def lk(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True, block_q=32,
+                                       block_kv=32) ** 2)
+
+    def lr(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, causal=True) ** 2)
+
+    gk = jax.grad(lk, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-3)
+
+
+def test_flash_attention_softcap():
+    b, s, h, hd = 1, 64, 2, 32
+    q = jnp.asarray(RNG.normal(0, 2, (b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 2, (b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, softcap=10.0,
+                          block_q=32, block_kv=32)
+    ref = attention_ref(q, k, v, causal=True, softcap=10.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,hd,smax", [
+    (2, 4, 4, 32, 128),
+    (3, 8, 2, 64, 256),
+    (1, 4, 1, 128, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_shapes(b, h, hkv, hd, smax, dtype):
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, hd)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (b, smax, hkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (b, smax, hkv, hd)), dtype)
+    lens = jnp.asarray(RNG.integers(1, smax + 1, (b,)), jnp.int32)
+    out = decode_attention(q, k, v, lens, block_kv=64)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@given(st.integers(min_value=1, max_value=200))
+@settings(max_examples=8, deadline=None)
+def test_decode_attention_ragged_lengths_property(kv_len):
+    """Cache entries beyond kv_len never influence the output."""
+    b, h, hd, smax = 1, 2, 32, 256
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, hd)), jnp.float32)
+    k = np.asarray(RNG.normal(0, 1, (b, smax, h, hd)), np.float32)
+    v = np.asarray(RNG.normal(0, 1, (b, smax, h, hd)), np.float32)
+    k2, v2 = k.copy(), v.copy()
+    k2[:, kv_len:] = 999.0      # poison the dead region
+    v2[:, kv_len:] = -999.0
+    out1 = decode_attention(q, jnp.asarray(k), jnp.asarray(v),
+                            jnp.int32(kv_len), block_kv=64)
+    out2 = decode_attention(q, jnp.asarray(k2), jnp.asarray(v2),
+                            jnp.int32(kv_len), block_kv=64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rglru scan sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,d,bt,bd", [
+    (1, 64, 32, 16, 32),
+    (2, 128, 96, 32, 32),
+    (1, 96, 48, 32, 16),    # non-pow2 sizes
+])
+def test_rglru_scan_shapes(b, s, d, bt, bd):
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (b, s, d)), jnp.float32)
+    x = jnp.asarray(RNG.normal(0, 0.1, (b, s, d)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(0, 1, (b, d)), jnp.float32)
+    hs, hl = rglru_scan(a, x, h0, block_t=bt, block_d=bd)
+    hs_r, hl_r = rglru_scan_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hl_r), atol=1e-5)
+
+
+def test_rglru_scan_gradients():
+    b, s, d = 1, 64, 32
+    a = jnp.asarray(RNG.uniform(0.7, 0.99, (b, s, d)), jnp.float32)
+    x = jnp.asarray(RNG.normal(0, 0.1, (b, s, d)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(0, 1, (b, d)), jnp.float32)
+
+    def lk(a, x, h0):
+        hs, hl = rglru_scan(a, x, h0, block_t=16, block_d=16)
+        return jnp.sum(hs ** 2) + jnp.sum(hl)
+
+    def lr(a, x, h0):
+        hs, hl = rglru_scan_ref(a, x, h0)
+        return jnp.sum(hs ** 2) + jnp.sum(hl)
+
+    gk = jax.grad(lk, argnums=(0, 1, 2))(a, x, h0)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(a, x, h0)
+    for g1, g2 in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=4, max_value=32))
+@settings(max_examples=8, deadline=None)
+def test_rglru_block_size_invariance_property(nblocks, bt):
+    """The blocked scan result is independent of the block size."""
+    b, d = 1, 16
+    s = nblocks * bt
+    a = jnp.asarray(RNG.uniform(0.5, 0.999, (b, s, d)), jnp.float32)
+    x = jnp.asarray(RNG.normal(0, 0.2, (b, s, d)), jnp.float32)
+    h0 = jnp.zeros((b, d), jnp.float32)
+    hs1, _ = rglru_scan(a, x, h0, block_t=bt, block_d=d)
+    hs2, _ = rglru_scan(a, x, h0, block_t=s, block_d=d)
+    np.testing.assert_allclose(np.asarray(hs1), np.asarray(hs2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mlstm chunk sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,hd,chunk", [
+    (1, 2, 64, 32, 16),
+    (2, 3, 64, 32, 32),
+    (1, 1, 128, 64, 64),
+])
+def test_mlstm_chunk_shapes(b, h, s, hd, chunk):
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, h, s, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, s, hd)), jnp.float32)
+    li = jnp.asarray(RNG.normal(0, 1, (b, h, s)), jnp.float32)
+    lf = jnp.asarray(-np.abs(RNG.normal(1, 0.5, (b, h, s))), jnp.float32)
+    C0 = jnp.zeros((b, h, hd, hd))
+    n0 = jnp.zeros((b, h, hd))
+    m0 = jnp.full((b, h), -1e30)
+    hs, (C, n, m) = mlstm_chunk(q, k, v, li, lf, C0, n0, m0, chunk=chunk)
+    hs_r, (Cr, nr, mr) = mlstm_ref(q, k, v, li, lf, C0, n0, m0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cr), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-5)
+
+
+def test_mlstm_carried_state_continuation():
+    """Processing [first half -> state -> second half] equals processing
+    the full sequence at once."""
+    b, h, s, hd = 1, 2, 64, 32
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, h, s, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, s, hd)), jnp.float32)
+    li = jnp.asarray(RNG.normal(0, 1, (b, h, s)), jnp.float32)
+    lf = jnp.asarray(-np.abs(RNG.normal(1, 0.5, (b, h, s))), jnp.float32)
+    zeroC = jnp.zeros((b, h, hd, hd))
+    zeron = jnp.zeros((b, h, hd))
+    zerom = jnp.full((b, h), -1e30)
+    full, _ = mlstm_chunk(q, k, v, li, lf, zeroC, zeron, zerom, chunk=16)
+    h1, (C, n, m) = mlstm_chunk(q[:, :, :32], k[:, :, :32], v[:, :, :32],
+                                li[:, :, :32], lf[:, :, :32],
+                                zeroC, zeron, zerom, chunk=16)
+    h2, _ = mlstm_chunk(q[:, :, 32:], k[:, :, 32:], v[:, :, 32:],
+                        li[:, :, 32:], lf[:, :, 32:], C, n, m, chunk=16)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(full[:, :, :32]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(full[:, :, 32:]),
+                               atol=1e-4)

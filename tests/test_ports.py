@@ -1,0 +1,106 @@
+"""Port / PortNamespace / ProcessSpec behaviour (paper §II.A)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import Int, Float, ProcessSpec
+from repro.core.ports import InputPort, PortNamespace
+
+
+def test_port_validation_type():
+    p = InputPort("a", valid_type=Int)
+    assert p.validate(Int(3)) is None
+    err = p.validate(Float(3.0))
+    assert err is not None and "a" in err
+
+
+def test_port_custom_validator():
+    p = InputPort("a", valid_type=Int,
+                  validator=lambda v: None if v.value > 0 else "not positive")
+    assert p.validate(Int(1)) is None
+    assert "not positive" in p.validate(Int(-1))
+
+
+def test_port_default_and_required():
+    p = InputPort("a", valid_type=Int, default=Int(2))
+    assert not p.required
+    assert p.default.value == 2
+    q = InputPort("b", valid_type=Int)
+    assert q.required
+    assert "required" in q.validate(None)
+
+
+def test_nested_namespace_creation():
+    ns = PortNamespace("inputs")
+    ns["nested.input.namespace"] = InputPort("x", valid_type=Int)
+    assert isinstance(ns["nested"], PortNamespace)
+    assert isinstance(ns["nested.input"], PortNamespace)
+    assert isinstance(ns["nested.input.namespace"], InputPort)
+
+
+def test_namespace_rejects_undeclared():
+    ns = PortNamespace("inputs")
+    ns["a"] = InputPort("a", valid_type=Int, required=False)
+    assert ns.validate({"a": Int(1), "zz": Int(2)}) is not None
+    ns.dynamic = True
+    assert ns.validate({"a": Int(1), "zz": Int(2)}) is None
+
+
+def test_spec_declarative_override():
+    """Paper listing 3: later declarations override earlier ones."""
+    spec = ProcessSpec()
+    spec.input("a", valid_type=Int)
+    spec.input("a", valid_type=Float)
+    assert spec.inputs["a"].valid_type == (Float,)
+    assert spec.validate_inputs({"a": Float(1.0)}) is None
+    assert spec.validate_inputs({"a": Int(1)}) is not None
+
+
+def test_spec_exit_codes():
+    spec = ProcessSpec()
+    spec.exit_code(418, "ERROR_I_AM_A_TEAPOT",
+                   "the workchain experienced an identity crisis")
+    ec = spec.exit_codes.ERROR_I_AM_A_TEAPOT
+    assert ec.status == 418
+    assert "identity crisis" in ec.message
+    with pytest.raises(AttributeError):
+        spec.exit_codes.NOPE
+    with pytest.raises(ValueError):
+        spec.exit_code(-1, "BAD", "negative")
+
+
+def test_non_db_ports_excluded_from_projection():
+    ns = PortNamespace("inputs")
+    ns["a"] = InputPort("a", valid_type=Int)
+    ns["meta"] = InputPort("meta", non_db=True, required=False)
+    proj = ns.project({"a": Int(1), "meta": {"x": 1}})
+    assert "meta" not in proj and "a" in proj
+
+
+@given(st.lists(st.sampled_from("abcdefgh"), min_size=1, max_size=5,
+                unique=True),
+       st.sets(st.sampled_from("abcdefgh")))
+def test_namespace_validate_required_property(declared, provided):
+    """Validation fails iff some declared required port is missing."""
+    ns = PortNamespace("inputs")
+    for name in declared:
+        ns[name] = InputPort(name, valid_type=Int)
+    values = {name: Int(1) for name in provided if name in declared}
+    err = ns.validate(values)
+    missing = set(declared) - set(values)
+    assert (err is None) == (not missing)
+
+
+@given(st.integers(min_value=0, max_value=3),
+       st.integers(min_value=1, max_value=4))
+def test_namespace_nesting_depth_property(depth, width):
+    ns = PortNamespace("root")
+    path = ".".join(f"lvl{i}" for i in range(depth + 1))
+    for w in range(width):
+        ns[f"{path}.p{w}"] = InputPort(f"p{w}", valid_type=Int,
+                                       required=False)
+    node = ns
+    for i in range(depth + 1):
+        node = node[f"lvl{i}"]
+        assert isinstance(node, PortNamespace)
+    assert len(node) == width

@@ -1,0 +1,105 @@
+"""calcfunction / workfunction provenance (paper figs. 1–2)."""
+
+import pytest
+
+from repro.core import ExitCode, Int, calcfunction, workfunction
+from repro.provenance.store import LinkType, NodeType, QueryBuilder
+
+
+@calcfunction
+def add(a, b):
+    return a + b
+
+
+@calcfunction
+def multiply(a, b):
+    return a * b
+
+
+@workfunction
+def add_multiply(x, y, z):
+    return multiply(add(x, y), z)
+
+
+def test_calcfunction_result_and_provenance(store, runner):
+    res = multiply(add(Int(3), Int(4)), Int(5))
+    assert res.value == 35
+    assert QueryBuilder(store).nodes(NodeType.CALC_FUNCTION).count() == 2
+    # fig 1: each calc has 2 inputs and 1 created output
+    for node in QueryBuilder(store).nodes(NodeType.CALC_FUNCTION).all():
+        ins = store.incoming(node["pk"], LinkType.INPUT_CALC)
+        outs = store.outgoing(node["pk"], LinkType.CREATE)
+        assert len(ins) == 2 and len(outs) == 1
+
+
+def test_workfunction_call_links(store, runner):
+    res = add_multiply(Int(1), Int(2), Int(3))
+    assert res.value == 9
+    wf = QueryBuilder(store).nodes(NodeType.WORK_FUNCTION).first()
+    calls = store.outgoing(wf["pk"], LinkType.CALL_CALC)
+    assert len(calls) == 2                       # fig 2: two CALL links
+    rets = store.outgoing(wf["pk"], LinkType.RETURN)
+    assert len(rets) == 1
+    # the RETURN target is the same node CREATEd by the inner multiply —
+    # workfunctions return existing data, they do not create copies
+    ret_pk = rets[0][0]
+    created_by = store.incoming(ret_pk, LinkType.CREATE)
+    assert len(created_by) == 1
+
+
+def test_exceptions_mark_node_excepted(store, runner):
+    @calcfunction
+    def boom(a):
+        raise RuntimeError("bang")
+
+    with pytest.raises(RuntimeError, match="bang"):
+        boom(Int(1))
+    node = QueryBuilder(store).nodes(NodeType.CALC_FUNCTION) \
+        .with_state("excepted").first()
+    assert node is not None
+    logs = store.get_logs(node["pk"])
+    assert any("bang" in l["message"] for l in logs)
+
+
+def test_exit_code_return(store, runner):
+    @calcfunction
+    def refuses(a):
+        return ExitCode(410, "nope", "ERROR_NOPE")
+
+    out = refuses(Int(1))
+    assert isinstance(out, ExitCode)
+    node = QueryBuilder(store).nodes(NodeType.CALC_FUNCTION).first()
+    assert node["exit_status"] == 410
+
+
+def test_dict_outputs(store, runner):
+    @calcfunction
+    def split(a):
+        return {"half": Int(a.value // 2), "rest": Int(a.value % 2)}
+
+    out = split(Int(7))
+    assert out["half"].value == 3 and out["rest"].value == 1
+    node = QueryBuilder(store).nodes(NodeType.CALC_FUNCTION).first()
+    outs = store.outgoing(node["pk"], LinkType.CREATE)
+    assert {label for _, _, label in outs} == {"half", "rest"}
+
+
+def test_nested_workfunctions_nest_call_links(store, runner):
+    @workfunction
+    def outer(x):
+        return add_multiply(x, Int(1), Int(2))
+
+    res = outer(Int(5))
+    assert res.value == 12
+    wfs = QueryBuilder(store).nodes(NodeType.WORK_FUNCTION).all()
+    assert len(wfs) == 2
+    outer_node = next(n for n in wfs if n["process_type"] == "outer")
+    calls = store.outgoing(outer_node["pk"], LinkType.CALL_WORK)
+    assert len(calls) == 1
+
+
+def test_run_get_node(store, runner):
+    result, proc, exit_code = add.run_get_node(Int(2), Int(3))
+    assert result.value == 5
+    assert exit_code.status == 0
+    assert store.get_node(proc.pk)["process_state"] == "finished"

@@ -1,0 +1,144 @@
+"""Provenance store: nodes, links, logs, QueryBuilder, graph invariants."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ArrayData, Dict, Float, Int, Str
+from repro.core.datatypes import DataValue, FolderData, to_data_value
+from repro.provenance.store import (
+    LinkType, NodeType, ProvenanceStore, QueryBuilder,
+)
+
+import numpy as np
+
+
+def test_store_and_load_roundtrip(store):
+    for value in (Int(7), Float(2.5), Str("hi"), Dict({"a": 1}),
+                  ArrayData(np.arange(6).reshape(2, 3))):
+        store.store_data(value)
+        loaded = store.load_data(value.pk)
+        assert loaded == value
+        assert loaded.uuid == value.uuid
+
+
+def test_folder_data_roundtrip(store):
+    f = FolderData({"metrics.json": b"{}", "log.txt": b"hello"})
+    store.store_data(f)
+    loaded = store.load_data(f.pk)
+    assert loaded.names() == ["log.txt", "metrics.json"]
+    assert loaded.get_bytes("log.txt") == b"hello"
+
+
+def test_store_is_idempotent(store):
+    v = Int(3)
+    store.store_data(v)
+    pk1 = v.pk
+    store.store_data(v)
+    assert v.pk == pk1
+    assert store.count_nodes(NodeType.DATA) == 1
+
+
+def test_links_and_traversal(store):
+    a, b = Int(1), Int(2)
+    store.store_data(a)
+    store.store_data(b)
+    proc = store.create_process_node(NodeType.CALC_FUNCTION, "add")
+    store.add_link(a.pk, proc, LinkType.INPUT_CALC, "x")
+    store.add_link(b.pk, proc, LinkType.INPUT_CALC, "y")
+    out = Int(3)
+    store.store_data(out)
+    store.add_link(proc, out.pk, LinkType.CREATE, "result")
+    assert {p for p, _, _ in store.incoming(proc)} == {a.pk, b.pk}
+    assert [p for p, _, _ in store.outgoing(proc)] == [out.pk]
+
+
+def test_querybuilder_filters(store):
+    for i in range(5):
+        pk = store.create_process_node(NodeType.WORK_CHAIN, "WC",
+                                       label=f"wc{i}")
+        store.update_process(pk, state="finished", exit_status=i % 2)
+    qb = QueryBuilder(store).nodes(NodeType.WORK_CHAIN).with_exit_status(0)
+    assert qb.count() == 3
+    assert QueryBuilder(store).nodes(NodeType.WORK_CHAIN) \
+        .with_label("wc3").first()["label"] == "wc3"
+    assert QueryBuilder(store).nodes("process").count() == 5
+
+
+def test_logs(store):
+    pk = store.create_process_node(NodeType.WORK_CHAIN, "WC")
+    store.add_log(pk, "REPORT", "hello world")
+    store.add_log(pk, "ERROR", "boom")
+    logs = store.get_logs(pk)
+    assert [l["levelname"] for l in logs] == ["REPORT", "ERROR"]
+
+
+def test_unfinished_processes(store):
+    p1 = store.create_process_node(NodeType.CALC_JOB, "J")
+    p2 = store.create_process_node(NodeType.CALC_JOB, "J")
+    store.update_process(p2, state="finished", exit_status=0)
+    unfinished = [n["pk"] for n in store.unfinished_processes()]
+    assert p1 in unfinished and p2 not in unfinished
+
+
+def test_checkpoint_roundtrip(store):
+    pk = store.create_process_node(NodeType.WORK_CHAIN, "WC")
+    assert store.load_checkpoint(pk) is None
+    store.save_checkpoint(pk, {"stage": "submit", "ctx": {"n": 3}})
+    assert store.load_checkpoint(pk)["ctx"]["n"] == 3
+    store.delete_checkpoint(pk)
+    assert store.load_checkpoint(pk) is None
+
+
+@given(st.one_of(
+    st.integers(min_value=-10**9, max_value=10**9),
+    st.floats(allow_nan=False, allow_infinity=False, width=32),
+    st.text(max_size=40),
+    st.booleans(),
+    st.lists(st.integers(min_value=0, max_value=100), max_size=10),
+))
+@settings(max_examples=40, deadline=None)
+def test_datavalue_payload_roundtrip_property(value):
+    dv = to_data_value(value)
+    back = DataValue.from_payload(dv.to_payload())
+    assert back == dv
+
+
+@given(st.integers(min_value=1, max_value=12))
+@settings(max_examples=10, deadline=None)
+def test_provenance_graph_acyclic_property(n_calls):
+    """Chained calcfunction executions form a DAG: no pk is reachable from
+    itself following link direction."""
+    from repro.core import calcfunction
+    from repro.engine.runner import Runner, set_default_runner
+    from repro.provenance.store import configure_store
+
+    store = configure_store(":memory:")
+    set_default_runner(Runner(store=store))
+
+    @calcfunction
+    def inc(a):
+        return Int(a.value + 1)
+
+    v = Int(0)
+    for _ in range(n_calls):
+        v = inc(v)
+    assert v.value == n_calls
+
+    # BFS over outgoing links from every node; no cycles
+    edges = {}
+    total = store.count_nodes()
+    for pk in range(1, total + 1):
+        edges[pk] = [o for o, _, _ in store.outgoing(pk)]
+    seen_order = {}
+
+    def dfs(u, stack):
+        assert u not in stack, "cycle in provenance graph"
+        if u in seen_order:
+            return
+        seen_order[u] = True
+        for w in edges.get(u, []):
+            dfs(w, stack | {u})
+
+    for pk in edges:
+        dfs(pk, frozenset())
+    set_default_runner(None)

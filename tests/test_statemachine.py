@@ -1,0 +1,84 @@
+"""Extended-FSM invariants (paper §III.B fig. 6), incl. hypothesis walks."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.statemachine import (
+    InvalidTransitionError, ProcessState, StateMachine, TERMINAL_STATES,
+    TRANSITIONS,
+)
+
+
+class Recorder(StateMachine):
+    def __init__(self):
+        super().__init__()
+        self.events = []
+
+    def on_exiting(self):
+        self.events.append(("exiting", self.state))
+
+    def on_entering(self, state):
+        self.events.append(("entering", state))
+
+    def on_entered(self, from_state):
+        self.events.append(("entered", from_state, self.state))
+
+
+def test_happy_path_hook_order():
+    sm = Recorder()
+    sm.transition_to(ProcessState.RUNNING)
+    assert sm.events == [
+        ("exiting", ProcessState.CREATED),
+        ("entering", ProcessState.RUNNING),
+        ("entered", ProcessState.CREATED, ProcessState.RUNNING),
+    ]
+
+
+def test_terminal_states_allow_nothing():
+    for terminal in TERMINAL_STATES:
+        assert TRANSITIONS[terminal] == frozenset()
+
+
+def test_invalid_transition_raises_and_preserves_state():
+    sm = Recorder()
+    with pytest.raises(InvalidTransitionError):
+        sm.transition_to(ProcessState.FINISHED)   # CREATED -/-> FINISHED
+    assert sm.state is ProcessState.CREATED
+
+
+def test_pause_resume_returns_to_interrupted_state():
+    sm = Recorder()
+    sm.transition_to(ProcessState.RUNNING)
+    sm.transition_to(ProcessState.WAITING)
+    sm.transition_to(ProcessState.PAUSED)
+    assert sm.resume_from_pause() is ProcessState.WAITING
+
+
+@given(st.lists(st.sampled_from(list(ProcessState)), max_size=12))
+def test_random_walk_respects_transition_table(targets):
+    """Any sequence of attempted transitions either follows the table or
+    raises, and the machine never leaves a terminal state."""
+    sm = Recorder()
+    for tgt in targets:
+        current = sm.state
+        if tgt in TRANSITIONS[current]:
+            sm.transition_to(tgt)
+            assert sm.state is tgt
+        else:
+            with pytest.raises(InvalidTransitionError):
+                sm.transition_to(tgt)
+            assert sm.state is current
+        if sm.is_terminated:
+            assert sm.state in TERMINAL_STATES
+
+
+@given(st.lists(st.sampled_from(list(ProcessState)), max_size=12))
+def test_entered_hook_fires_exactly_once_per_transition(targets):
+    sm = Recorder()
+    transitions = 0
+    for tgt in targets:
+        if tgt in TRANSITIONS[sm.state]:
+            sm.transition_to(tgt)
+            transitions += 1
+    entered = [e for e in sm.events if e[0] == "entered"]
+    assert len(entered) == transitions

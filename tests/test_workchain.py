@@ -1,0 +1,267 @@
+"""WorkChain outline DSL, context, awaitables, checkpoint resume
+(paper §II.B.3)."""
+
+import asyncio
+
+import pytest
+
+from repro.core import (
+    ExitCode, Int, Process, ProcessState, ToContext, WorkChain, append_,
+    calcfunction, if_, return_, while_,
+)
+from repro.provenance.store import LinkType, NodeType, QueryBuilder
+
+
+class Counter(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("n", valid_type=Int, default=Int(5))
+        spec.output("total", valid_type=Int)
+        spec.outline(
+            cls.setup,
+            while_(cls.below)(cls.bump),
+            cls.finish,
+        )
+
+    def setup(self):
+        self.ctx.i = 0
+
+    def below(self):
+        return self.ctx.i < self.inputs["n"].value
+
+    def bump(self):
+        self.ctx.i += 1
+
+    def finish(self):
+        self.out("total", Int(self.ctx.i))
+
+
+def test_while_loop(store, runner):
+    outputs, proc = runner.run(Counter, {"n": Int(7)})
+    assert proc.is_finished_ok
+    assert outputs["total"].value == 7
+
+
+class Conditional(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("x", valid_type=Int)
+        spec.output("kind", valid_type=Int)
+        spec.outline(
+            if_(cls.is_big)(cls.set_big)
+            .elif_(cls.is_medium)(cls.set_medium)
+            .else_(cls.set_small),
+        )
+
+    def is_big(self):
+        return self.inputs["x"].value > 100
+
+    def is_medium(self):
+        return self.inputs["x"].value > 10
+
+    def set_big(self):
+        self.out("kind", Int(2))
+
+    def set_medium(self):
+        self.out("kind", Int(1))
+
+    def set_small(self):
+        self.out("kind", Int(0))
+
+
+@pytest.mark.parametrize("x,expected", [(1000, 2), (50, 1), (3, 0)])
+def test_if_elif_else(store, runner, x, expected):
+    outputs, proc = runner.run(Conditional, {"x": Int(x)})
+    assert outputs["kind"].value == expected
+
+
+class EarlyReturn(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.outline(
+            cls.first,
+            return_,
+            cls.never,
+        )
+
+    def first(self):
+        self.ctx.ran = ["first"]
+
+    def never(self):
+        self.ctx.ran.append("never")
+
+
+def test_return_stops_outline(store, runner):
+    outputs, proc = runner.run(EarlyReturn, {})
+    assert proc.is_finished_ok
+    assert proc.ctx.ran == ["first"]
+
+
+class Aborter(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.exit_code(418, "ERROR_I_AM_A_TEAPOT",
+                       "the workchain experienced an identity crisis")
+        spec.outline(cls.abort_straightaway)
+
+    def abort_straightaway(self):
+        self.report("work chain will be terminated")
+        return self.exit_codes.ERROR_I_AM_A_TEAPOT
+
+
+def test_exit_code_abort(store, runner):
+    outputs, proc = runner.run(Aborter, {})
+    assert proc.state is ProcessState.FINISHED
+    assert proc.exit_code.status == 418
+    assert store.get_node(proc.pk)["exit_status"] == 418
+
+
+class IntReturnAbort(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.outline(cls.go)
+
+    def go(self):
+        return 404
+
+
+def test_integer_abort(store, runner):
+    outputs, proc = runner.run(IntReturnAbort, {})
+    assert proc.exit_code.status == 404
+
+
+@calcfunction
+def double(a):
+    return Int(a.value * 2)
+
+
+class Child(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("a", valid_type=Int)
+        spec.output("doubled", valid_type=Int)
+        spec.outline(cls.go)
+
+    def go(self):
+        self.out("doubled", double(self.inputs["a"]))
+
+
+class Parent(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.expose_inputs(Child)
+        spec.output("result", valid_type=Int)
+        spec.outline(cls.launch, cls.collect)
+
+    def launch(self):
+        child = self.submit(Child, **self.exposed_inputs(Child))
+        return ToContext(child=child)
+
+    def collect(self):
+        assert self.ctx.child.is_finished_ok
+        self.out("result", self.ctx.child.outputs["doubled"])
+
+
+def test_tocontext_and_expose(store, runner):
+    outputs, proc = runner.run(Parent, {"a": Int(21)})
+    assert outputs["result"].value == 42
+    # CALL_WORK link parent -> child
+    calls = store.outgoing(proc.pk, LinkType.CALL_WORK)
+    assert len(calls) == 1
+
+
+class FanOut(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("n", valid_type=Int, default=Int(4))
+        spec.output("sum", valid_type=Int)
+        spec.outline(cls.launch_all, cls.collect)
+
+    def launch_all(self):
+        for i in range(self.inputs["n"].value):
+            self.to_context(children=append_(self.submit(Child,
+                                                         a=Int(i))))
+
+    def collect(self):
+        total = sum(c.outputs["doubled"].value for c in self.ctx.children)
+        self.out("sum", Int(total))
+
+
+def test_append_parallel_children(store, runner):
+    outputs, proc = runner.run(FanOut, {"n": Int(4)})
+    assert outputs["sum"].value == 2 * (0 + 1 + 2 + 3)
+    assert len(proc.ctx.children) == 4
+
+
+def test_missing_required_output_fails(store, runner):
+    class Forgetful(WorkChain):
+        @classmethod
+        def define(cls, spec):
+            super().define(spec)
+            spec.output("must_have", valid_type=Int)
+            spec.outline(cls.noop)
+
+        def noop(self):
+            pass
+
+    outputs, proc = runner.run(Forgetful, {})
+    assert not proc.is_finished_ok
+    assert proc.exit_code.status == 11
+
+
+class TwoPhase(WorkChain):
+    """Module-level (checkpoint recreation imports the class by path,
+    exactly like AiiDA requires registered, importable process classes)."""
+
+    executed = []
+    crash_once = True
+
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.output("v", valid_type=Int)
+        spec.outline(cls.phase1, cls.phase2)
+
+    def phase1(self):
+        self.ctx.v = 41
+        TwoPhase.executed.append("phase1")
+
+    def phase2(self):
+        if TwoPhase.crash_once:
+            TwoPhase.crash_once = False
+            TwoPhase.executed.append("phase2_crash")
+            raise KeyboardInterrupt  # hard worker death mid-step
+        TwoPhase.executed.append("phase2")
+        self.out("v", Int(self.ctx.v + 1))
+
+
+def test_checkpoint_resume_mid_outline(store, runner):
+    """Kill a workchain between steps; recreate from checkpoint; the
+    context and outline position survive (paper §II.B.3.c). phase1 must
+    NOT re-run on resume — only the step that was interrupted does."""
+    TwoPhase.executed = []
+    TwoPhase.crash_once = True
+    proc = TwoPhase(inputs={}, runner=runner)
+    pk = proc.pk
+    with pytest.raises(KeyboardInterrupt):
+        runner.loop.run_until_complete(proc.step_until_terminated())
+
+    # Simulated restart: a fresh process object from the DB checkpoint
+    # (saved after phase1 completed, before phase2 crashed).
+    ckpt = store.load_checkpoint(pk)
+    assert ckpt is not None
+    resumed = Process.recreate_from_checkpoint(ckpt, runner=runner)
+    assert resumed.ctx.v == 41
+    runner.loop.run_until_complete(resumed.step_until_terminated())
+    assert resumed.is_finished_ok
+    assert resumed.outputs["v"].value == 42
+    # phase1 ran exactly once; phase2 re-ran after the crash
+    assert TwoPhase.executed == ["phase1", "phase2_crash", "phase2"]
