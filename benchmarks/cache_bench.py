@@ -1,0 +1,122 @@
+"""Cache-hit fast path vs recomputation on a high-throughput workload.
+
+Runs ~500 calculation processes twice against one provenance store:
+
+* **cold** — empty cache, every process executes its body (a deterministic
+  CPU-bound kernel, ~tens of ms each);
+* **warm** — the same 500 submissions with caching enabled: every one
+  resolves to a finished-ok node from the cold pass, clones its outputs
+  and terminates without executing.
+
+Reports both throughputs and the speedup; the acceptance bar is warm >=
+10x cold. Also verifies that a warm node carries `cached_from` metadata
+pointing at the original finished-ok node.
+
+    PYTHONPATH=src python -m benchmarks.cache_bench --processes 500
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.caching import disable_caching, enable_caching
+from repro.core import Int, Process, ProcessSpec
+from repro.engine.runner import Runner, set_default_runner
+from repro.provenance.store import NodeType, configure_store
+
+
+class HashGrind(Process):
+    """A deterministic, CPU-bound 'calculation': iterated sha256 over a
+    seed-derived buffer (the stand-in for a real simulation kernel)."""
+
+    NODE_TYPE = NodeType.CALC_FUNCTION
+
+    @classmethod
+    def define(cls, spec: ProcessSpec) -> None:
+        super().define(spec)
+        spec.input("seed", valid_type=Int)
+        spec.input("rounds", valid_type=Int, default=Int(1200))
+        spec.output("digest", valid_type=Int)
+
+    async def run(self):
+        buf = np.random.default_rng(self.inputs["seed"].value) \
+            .bytes(1 << 14)
+        for _ in range(self.inputs["rounds"].value):
+            buf = hashlib.sha256(buf).digest() + buf[:1 << 14]
+        self.out("digest",
+                 Int(int.from_bytes(hashlib.sha256(buf).digest()[:6], "big")))
+
+
+def run_pass(runner: Runner, n: int, rounds: int) -> float:
+    async def main() -> float:
+        t0 = time.perf_counter()
+        handles = [runner.submit(HashGrind, {"seed": Int(i),
+                                             "rounds": Int(rounds)})
+                   for i in range(n)]
+        for h in handles:
+            await h.process.wait_done()
+        assert all(h.process.is_finished_ok for h in handles)
+        return time.perf_counter() - t0
+
+    return runner.loop.run_until_complete(main())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--processes", type=int, default=500)
+    ap.add_argument("--rounds", type=int, default=1200,
+                    help="sha256 rounds per process (cold-pass work)")
+    ap.add_argument("--slots", type=int, default=100)
+    args = ap.parse_args()
+
+    store = configure_store(":memory:")
+    runner = Runner(store=store, slots=args.slots)
+    set_default_runner(runner)
+
+    with disable_caching():
+        t_cold = run_pass(runner, args.processes, args.rounds)
+    cold_tp = args.processes / t_cold
+
+    with enable_caching(HashGrind):
+        t_warm = run_pass(runner, args.processes, args.rounds)
+    warm_tp = args.processes / t_warm
+
+    # every warm node must be a clone of a cold finished-ok node
+    rows = store._conn().execute(
+        "SELECT pk, attributes FROM nodes WHERE process_type='HashGrind'"
+        " ORDER BY pk").fetchall()
+    warm_rows = rows[args.processes:]
+    hits = 0
+    for r in warm_rows:
+        attrs = json.loads(r["attributes"] or "{}")
+        src_pk = attrs.get("cached_from_pk")
+        if src_pk is None:
+            continue
+        src = store.get_node(src_pk)
+        assert src["process_state"] == "finished" and \
+            src["exit_status"] == 0, f"bad cache source for {r['pk']}"
+        assert attrs["cached_from"] == src["uuid"]
+        hits += 1
+    speedup = warm_tp / cold_tp
+
+    print(f"processes:        {args.processes}")
+    print(f"cold:  {t_cold:6.2f}s  ({cold_tp:8.1f} proc/s)")
+    print(f"warm:  {t_warm:6.2f}s  ({warm_tp:8.1f} proc/s)")
+    print(f"cache hits:       {hits}/{len(warm_rows)} "
+          f"(each with cached_from -> finished-ok source)")
+    print(f"speedup:          {speedup:.1f}x "
+          f"({'PASS' if speedup >= 10 else 'FAIL'}: bar is 10x)")
+    if hits != len(warm_rows) or speedup < 10:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

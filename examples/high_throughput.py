@@ -9,9 +9,17 @@ With --crash, workers hard-exit every ~2s until the supervisor has
 restarted four of them; jobs still finish because (a) the broker requeues
 un-acked tasks when heartbeats stop, and (b) each process resumes from its
 last persisted checkpoint on whichever worker picks it up.
+
+With --cached-rerun, the whole batch is submitted a second time after the
+first pass finishes: the daemon workers (which inherit REPRO_CACHING from
+this process) resolve every job against the provenance cache, clone the
+outputs and never touch the scheduler — the warm pass completes in
+seconds regardless of job size.
 """
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -25,13 +33,26 @@ from repro.provenance.store import NodeType, QueryBuilder, configure_store
 TERMINAL = ("finished", "excepted", "killed")
 
 
+def submit_batch(daemon, n_jobs):
+    return [daemon.submit(TPUTrainJob, {"config": Dict({
+        "arch": "qwen2-0.5b", "steps": 3, "batch": 2, "seq": 32,
+        "seed": i, "lr": 1e-3})}) for i in range(n_jobs)]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--jobs", type=int, default=6)
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--crash", action="store_true")
+    ap.add_argument("--cached-rerun", action="store_true",
+                    help="resubmit the batch after it finishes; every job "
+                         "should be served from the provenance cache")
     ap.add_argument("--workdir", default="examples_out/daemon")
     args = ap.parse_args()
+
+    if args.cached_rerun:
+        # workers inherit the environment at spawn time
+        os.environ["REPRO_CACHING"] = "TPUTrainJob"
 
     daemon = Daemon(args.workdir, workers=args.workers, slots=16,
                     crash_after=2.0 if args.crash else None)
@@ -40,12 +61,7 @@ def main():
           f"{args.workers} workers")
 
     t0 = time.time()
-    pks = []
-    for i in range(args.jobs):
-        pk = daemon.submit(TPUTrainJob, {"config": Dict({
-            "arch": "qwen2-0.5b", "steps": 3, "batch": 2, "seq": 32,
-            "seed": i, "lr": 1e-3})})
-        pks.append(pk)
+    pks = submit_batch(daemon, args.jobs)
     print(f"submitted {args.jobs} TPUTrainJobs: pks={pks}")
 
     store = configure_store(daemon.store_path)
@@ -78,6 +94,28 @@ def main():
     qb = QueryBuilder(store)
     print(f"provenance: {qb.nodes(NodeType.CALC_JOB).count()} calcjobs, "
           f"{QueryBuilder(store).nodes(NodeType.DATA).count()} data nodes")
+
+    if args.cached_rerun:
+        print("\n== cached second pass ==")
+        t1 = time.time()
+        pks2 = submit_batch(daemon, args.jobs)
+        while True:
+            done = sum((store.get_node(pk) or {}).get("process_state")
+                       in TERMINAL for pk in pks2)
+            daemon.supervise()
+            if done == len(pks2):
+                break
+            time.sleep(0.2)
+        t_warm = time.time() - t1
+        hits = 0
+        for pk in pks2:
+            node = store.get_node(pk)
+            attrs = json.loads(node.get("attributes") or "{}")
+            hits += "cached_from" in attrs
+        print(f"{len(pks2)} jobs finished in {t_warm:.1f}s "
+              f"(first pass: {time.time()-t0-t_warm:.1f}s); "
+              f"{hits}/{len(pks2)} served from cache")
+
     daemon.stop()
 
 

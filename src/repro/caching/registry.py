@@ -1,0 +1,116 @@
+"""Cache lookups over the provenance graph.
+
+The provenance store itself is the cache: every process node records its
+input fingerprint in the indexed ``node_hash`` column, so a lookup is one
+SELECT over ``(process_type, node_hash)``. Only *finished-ok* nodes serve
+as sources; invalidation simply clears ``node_hash`` on the source nodes
+(their provenance is untouched — they just stop matching).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.provenance.store import LinkType, ProvenanceStore, QueryBuilder
+
+_OUTPUT_LINKS = (LinkType.CREATE.value, LinkType.RETURN.value)
+
+
+@dataclass
+class CacheHit:
+    pk: int
+    uuid: str
+    process_type: str
+    exit_status: int
+    exit_message: str | None
+    # (label, link_type value, data node pk) for each CREATE/RETURN edge
+    outputs: list[tuple[str, str, int]] = field(default_factory=list)
+
+
+class CacheRegistry:
+    def __init__(self, store: ProvenanceStore):
+        self.store = store
+
+    def find_cached(self, process_type: str, input_hash: str,
+                    exclude_pk: int | None = None) -> CacheHit | None:
+        """Most recent finished-ok node with this fingerprint, plus its
+        output edges — or None."""
+        if not input_hash:
+            return None
+        rows = (QueryBuilder(self.store)
+                .with_process_type(process_type)
+                .with_hash(input_hash)
+                .with_state("finished")
+                .with_exit_status(0)
+                .order_by("pk", desc=True)
+                .limit(2)   # newest match + one spare in case it's self
+                .all())
+        for row in rows:
+            if exclude_pk is not None and row["pk"] == exclude_pk:
+                continue
+            outputs = [(label, lt, pk)
+                       for pk, lt, label in self.store.outgoing(row["pk"])
+                       if lt in _OUTPUT_LINKS]
+            return CacheHit(pk=row["pk"], uuid=row["uuid"],
+                            process_type=process_type,
+                            exit_status=row["exit_status"],
+                            exit_message=row["exit_message"],
+                            outputs=outputs)
+        return None
+
+    # -- observability ------------------------------------------------------
+    def stats(self) -> dict[str, Any]:
+        """Per-process-type hashed-node counts, distinct fingerprints and
+        cache-hit (cloned) node counts."""
+        conn = self.store._conn()
+        rows = conn.execute(
+            "SELECT process_type, COUNT(*) AS n,"
+            " COUNT(DISTINCT node_hash) AS distinct_hashes,"
+            " SUM(CASE WHEN json_extract(attributes, '$.cached_from')"
+            "     IS NOT NULL THEN 1 ELSE 0 END) AS hits"
+            " FROM nodes WHERE node_hash IS NOT NULL"
+            " AND node_type LIKE 'process%'"
+            " GROUP BY process_type ORDER BY process_type").fetchall()
+        per_type = {r["process_type"]: {
+            "hashed_nodes": r["n"],
+            "distinct_hashes": r["distinct_hashes"],
+            "cache_hits": r["hits"] or 0,
+        } for r in rows}
+        return {
+            "process_types": per_type,
+            "hashed_nodes": sum(v["hashed_nodes"] for v in per_type.values()),
+            "cache_hits": sum(v["cache_hits"] for v in per_type.values()),
+        }
+
+    def equivalents(self, pk: int) -> list[int]:
+        """Other process nodes sharing this node's fingerprint."""
+        node = self.store.get_node(pk)
+        if not node or not node.get("node_hash"):
+            return []
+        rows = (QueryBuilder(self.store)
+                .with_hash(node["node_hash"]).all())
+        return [r["pk"] for r in rows if r["pk"] != pk]
+
+    # -- invalidation --------------------------------------------------------
+    def invalidate(self, *, pk: int | None = None,
+                   process_type: str | None = None) -> int:
+        """Clear fingerprints so nodes stop serving as cache sources.
+        Give a pk, a process_type, or neither (= everything). Returns the
+        number of nodes invalidated."""
+        conn = self.store._conn()
+        with self.store._lock:
+            if pk is not None:
+                cur = conn.execute(
+                    "UPDATE nodes SET node_hash=NULL WHERE pk=?"
+                    " AND node_hash IS NOT NULL", (pk,))
+            elif process_type is not None:
+                cur = conn.execute(
+                    "UPDATE nodes SET node_hash=NULL WHERE process_type=?"
+                    " AND node_hash IS NOT NULL", (process_type,))
+            else:
+                cur = conn.execute(
+                    "UPDATE nodes SET node_hash=NULL"
+                    " WHERE node_hash IS NOT NULL")
+            conn.commit()
+        return cur.rowcount

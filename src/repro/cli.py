@@ -6,6 +6,9 @@
     PYTHONPATH=src python -m repro.cli -p <profile.db> node show <pk>
     PYTHONPATH=src python -m repro.cli -p <profile.db> graph export <pk> --out g.dot
     PYTHONPATH=src python -m repro.cli -p <profile.db> stats
+    PYTHONPATH=src python -m repro.cli -p <profile.db> cache stats
+    PYTHONPATH=src python -m repro.cli -p <profile.db> cache show <pk>
+    PYTHONPATH=src python -m repro.cli -p <profile.db> cache invalidate --process-type Foo
 
 Mirrors the AiiDA `verdi process ...` verbs the paper's users drive the
 engine with. Control verbs (pause/play/kill) require a running daemon and
@@ -155,6 +158,52 @@ def cmd_stats(store: ProvenanceStore, args) -> None:
         print(f"  pk={n['pk']} {n['process_type']} [{n['process_state']}]")
 
 
+def cmd_cache_stats(store: ProvenanceStore, args) -> None:
+    from repro.caching.registry import CacheRegistry
+
+    stats = CacheRegistry(store).stats()
+    print(f"{'process type':28}  {'hashed':>7}  {'distinct':>8}  "
+          f"{'cache hits':>10}")
+    for ptype, row in stats["process_types"].items():
+        print(f"{ptype[:28]:28}  {row['hashed_nodes']:>7}  "
+              f"{row['distinct_hashes']:>8}  {row['cache_hits']:>10}")
+    print(f"\n{stats['hashed_nodes']} hashed process nodes, "
+          f"{stats['cache_hits']} cache hits")
+
+
+def cmd_cache_show(store: ProvenanceStore, args) -> None:
+    from repro.caching.registry import CacheRegistry
+
+    node = store.get_node(args.pk)
+    if node is None:
+        sys.exit(f"no node with pk={args.pk}")
+    if not node["node_type"].startswith("process"):
+        sys.exit(f"node {args.pk} is a {node['node_type']} node; only "
+                 "process nodes carry cache fingerprints")
+    attrs = json.loads(node.get("attributes") or "{}")
+    print(f"{node['process_type']}<{args.pk}> "
+          f"[{node['process_state']}] exit={node['exit_status']}")
+    print(f"  node_hash:   {node.get('node_hash') or '(invalidated/none)'}")
+    if "cached_from" in attrs:
+        print(f"  cached_from: {attrs['cached_from']} "
+              f"(pk={attrs.get('cached_from_pk')})")
+    else:
+        print("  cached_from: — (computed, not cloned)")
+    eq = CacheRegistry(store).equivalents(args.pk)
+    print(f"  equivalents: {eq if eq else 'none'}")
+
+
+def cmd_cache_invalidate(store: ProvenanceStore, args) -> None:
+    from repro.caching.registry import CacheRegistry
+
+    given = [args.all, args.pk is not None, bool(args.process_type)]
+    if sum(given) != 1:
+        sys.exit("give exactly one of --pk, --process-type or --all")
+    n = CacheRegistry(store).invalidate(
+        pk=args.pk, process_type=args.process_type or None)
+    print(f"invalidated {n} node(s)")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(prog="repro.cli")
     ap.add_argument("-p", "--profile", default="examples_out/train_lm.db",
@@ -185,6 +234,16 @@ def main(argv=None) -> None:
 
     sub.add_parser("stats")
 
+    p_cache = sub.add_parser("cache")
+    cache_sub = p_cache.add_subparsers(dest="sub", required=True)
+    cache_sub.add_parser("stats")
+    cs = cache_sub.add_parser("show")
+    cs.add_argument("pk", type=int)
+    ci = cache_sub.add_parser("invalidate")
+    ci.add_argument("--pk", type=int, default=None)
+    ci.add_argument("--process-type", default="")
+    ci.add_argument("--all", action="store_true")
+
     args = ap.parse_args(argv)
     store = ProvenanceStore(args.profile)
 
@@ -200,6 +259,12 @@ def main(argv=None) -> None:
         cmd_graph_export(store, args)
     elif args.cmd == "stats":
         cmd_stats(store, args)
+    elif args.cmd == "cache" and args.sub == "stats":
+        cmd_cache_stats(store, args)
+    elif args.cmd == "cache" and args.sub == "show":
+        cmd_cache_show(store, args)
+    elif args.cmd == "cache" and args.sub == "invalidate":
+        cmd_cache_invalidate(store, args)
 
 
 if __name__ == "__main__":

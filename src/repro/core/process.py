@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import asyncio
 import contextvars
+import json
 import traceback
 from typing import Any, Mapping
 
@@ -59,6 +60,11 @@ class ProcessKilled(Exception):
 
 class Process(StateMachine):
     NODE_TYPE: NodeType = NodeType.PROCESS
+    # caching (AiiDA 1.0 §caching): bump CACHE_VERSION to invalidate every
+    # cached result of a class after a behaviour change; CACHEABLE=None
+    # derives eligibility from the node type (calc-like yes, work-like no)
+    CACHE_VERSION: int = 1
+    CACHEABLE: bool | None = None
     _spec_cache: dict[type, ProcessSpec] = {}
 
     # -- specification ---------------------------------------------------------
@@ -99,11 +105,25 @@ class Process(StateMachine):
         self._interrupts: list[asyncio.Future] = []
         self._pause_requested = False
 
+        # input fingerprint — computed for every cacheable type regardless
+        # of the current policy (so any later run can reuse this node);
+        # never-cacheable types (workchains …) skip the O(bytes) digest
+        self._input_hash: str | None = None
+        try:
+            from repro.caching.config import _is_cacheable
+            from repro.caching.hashing import compute_input_hash
+            if _is_cacheable(type(self)):
+                self._input_hash = compute_input_hash(type(self), merged,
+                                                      ns=spec.inputs)
+        except Exception:  # noqa: BLE001 — hashing must never block creation
+            pass
+
         # provenance node + input links
         self.pk = self.store.create_process_node(
             self.NODE_TYPE, process_type=type(self).__name__,
             label=self.metadata.get("label", ""),
-            description=self.metadata.get("description", ""))
+            description=self.metadata.get("description", ""),
+            node_hash=self._input_hash)
         self._link_inputs(spec.inputs, merged, prefix="")
 
         parent = CURRENT_PROCESS.get()
@@ -265,6 +285,8 @@ class Process(StateMachine):
         self._pause_requested = False
         self.pk = checkpoint["pk"]
         self.parent_pk = checkpoint.get("parent_pk")
+        node = self.store.get_node(self.pk) or {}
+        self._input_hash = node.get("node_hash")
         self.load_checkpoint_extras(checkpoint.get("extras", {}))
         return self
 
@@ -322,19 +344,86 @@ class Process(StateMachine):
         """Subclasses implement the body."""
         raise NotImplementedError
 
+    # -- caching fast path (AiiDA 1.0 §caching) -------------------------------
+    def _maybe_use_cache(self) -> ExitCode | None:
+        """Consult the cache; on a hit clone the cached outputs onto this
+        node and return the cached exit code, else None. Skipping run()
+        entirely means a CalcJob never even submits to the scheduler."""
+        if self._input_hash is None:
+            return None
+        try:
+            from repro.caching.config import is_caching_enabled_for
+            from repro.caching.registry import CacheRegistry
+            if not is_caching_enabled_for(type(self)):
+                return None
+            hit = CacheRegistry(self.store).find_cached(
+                type(self).__name__, self._input_hash, exclude_pk=self.pk)
+            if hit is None:
+                return None
+            # phase 1, read-only: rehydrate every output before touching
+            # the graph, so a bad source leaves no partial clone behind
+            clones = [(label, link_type,
+                       DataValue.from_payload(
+                           self.store.load_data(data_pk).to_payload()))
+                      for label, link_type, data_pk in hit.outputs]
+            src_attrs = json.loads(
+                (self.store.get_node(hit.pk) or {}).get("attributes")
+                or "{}")
+        except Exception:  # noqa: BLE001 — a broken cache must not break runs
+            self.store.add_log(self.pk, "WARNING",
+                               "cache lookup failed:\n" +
+                               traceback.format_exc())
+            return None
+        try:
+            # phase 2: commit the clones
+            out_ports = self.spec().outputs
+            for label, link_type, clone in clones:
+                self.store.store_data(clone)
+                self.store.add_link(self.pk, clone.pk, LinkType(link_type),
+                                    label)
+                # re-nest '<port>__<key>' labels, but only when the prefix
+                # is a declared output port — a flat label that merely
+                # contains '__' stays flat, matching the cold-run shape
+                ns_label, sep, sub = label.partition("__")
+                if sep and out_ports.get(label) is None and \
+                        out_ports.get(ns_label) is not None:
+                    self.outputs.setdefault(ns_label, {})[sub] = clone
+                else:
+                    self.outputs[label] = clone
+            # honest provenance: carry over the source's attributes and
+            # advertise what this node was cloned from
+            attrs = {k: v for k, v in src_attrs.items()
+                     if k not in ("paused", "cached_from", "cached_from_pk")}
+            attrs.update(cached_from=hit.uuid, cached_from_pk=hit.pk)
+            self.store.update_process(self.pk, attributes=attrs)
+            self.report("cache hit: cloned %d output(s) from %s<%d>",
+                        len(hit.outputs), type(self).__name__, hit.pk)
+            return ExitCode(hit.exit_status, hit.exit_message or "",
+                            "SUCCESS")
+        except Exception:  # noqa: BLE001 — roll back so run() starts clean
+            self.store.delete_outgoing_links(
+                self.pk, (LinkType.CREATE, LinkType.RETURN))
+            self.outputs.clear()
+            self.store.add_log(self.pk, "WARNING",
+                               "cache clone failed; recomputing:\n" +
+                               traceback.format_exc())
+            return None
+
     async def step_until_terminated(self) -> ExitCode:
         token = CURRENT_PROCESS.set(self)
         try:
             await self._pause_point()
             self.transition_to(ProcessState.RUNNING)
-            result = await self.run()
-            exit_code = _interpret_result(result)
-            if exit_code.is_finished_ok:
-                err = self._commit_outputs()
-                if err is not None:
-                    exit_code = ExitCode(
-                        11, f"output validation failed: {err}",
-                        "ERROR_INVALID_OUTPUTS")
+            exit_code = self._maybe_use_cache()
+            if exit_code is None:
+                result = await self.run()
+                exit_code = _interpret_result(result)
+                if exit_code.is_finished_ok:
+                    err = self._commit_outputs()
+                    if err is not None:
+                        exit_code = ExitCode(
+                            11, f"output validation failed: {err}",
+                            "ERROR_INVALID_OUTPUTS")
             self._exit_code = exit_code
             if not self.is_terminated:
                 self.transition_to(ProcessState.FINISHED)

@@ -29,10 +29,15 @@ def _make_function_process(fn: Callable, node_type: NodeType) -> type:
                  if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)]
     has_var_kw = any(p.kind is p.VAR_KEYWORD for p in sig.parameters.values())
 
+    from repro.caching.hashing import source_salt
+
     class FunctionProcess(Process):
         NODE_TYPE = node_type
         _func = staticmethod(fn)
         _pos_names = pos_names
+        # editing the function body changes the fingerprint, so stale
+        # cached results of the old implementation are never reused
+        _cache_extra_salt = source_salt(fn)
 
         @classmethod
         def define(cls, spec: ProcessSpec) -> None:
@@ -62,6 +67,10 @@ def _make_function_process(fn: Callable, node_type: NodeType) -> type:
                 if isinstance(result, dict) and not isinstance(result, DataValue):
                     for k, v in result.items():
                         self.out(k, to_data_value(v))
+                    # so a cache hit can reproduce the dict-shaped return
+                    # even when the dict has a single 'result' key
+                    self.store.update_process(self.pk,
+                                              attributes={"returns_dict": True})
                 else:
                     self.out("result", to_data_value(result))
             self._result_value = result
@@ -98,6 +107,9 @@ def _process_function(fn: Callable, node_type: NodeType) -> Callable:
             raise RuntimeError(
                 f"{fn.__name__} (pk={process.pk}) excepted:\n{err}")
         result = getattr(process, "_result_value", None)
+        if result is None and process.outputs:
+            return _outputs_as_result(process)  # cache hit: run() never
+            # executed, the cloned outputs carry the return value
         if result is None and isinstance(exit_code, ExitCode) and \
                 not exit_code.is_finished_ok:
             return exit_code
@@ -109,6 +121,20 @@ def _process_function(fn: Callable, node_type: NodeType) -> Callable:
     wrapper.run_get_node = lambda *a, **kw: _run_get_node(wrapper, process_class,
                                                           sig, *a, **kw)
     return wrapper
+
+
+def _outputs_as_result(process: Process) -> Any:
+    """Rebuild a cache-hit process's return value from its cloned outputs,
+    with the same shape the original call produced (the `returns_dict`
+    attribute is carried over from the cache source)."""
+    import json
+
+    outputs = dict(process.outputs)
+    node = process.store.get_node(process.pk) or {}
+    attrs = json.loads(node.get("attributes") or "{}")
+    if not attrs.get("returns_dict") and set(outputs) == {"result"}:
+        return outputs["result"]
+    return outputs
 
 
 def _run_get_node(wrapper, process_class, sig, *args, **kwargs):
@@ -126,6 +152,14 @@ def _run_get_node(wrapper, process_class, sig, *args, **kwargs):
     process = process_class(inputs=inputs, runner=runner)
     exit_code = runner.run_sync(process)
     result = getattr(process, "_result_value", None)
+    if result is None and process.outputs:
+        out = _outputs_as_result(process)
+        if isinstance(out, dict):
+            # cold dict-returns come back as one Dict DataValue here;
+            # rebuild that shape from the cloned outputs
+            out = to_data_value({k: v.value if isinstance(v, DataValue)
+                                 else v for k, v in out.items()})
+        return out, process, exit_code
     return (to_data_value(result) if result is not None else None,
             process, exit_code)
 

@@ -66,6 +66,7 @@ CREATE TABLE IF NOT EXISTS nodes (
     exit_status INTEGER,
     exit_message TEXT,
     checkpoint TEXT,
+    node_hash TEXT,
     ctime REAL NOT NULL,
     mtime REAL NOT NULL
 );
@@ -98,7 +99,18 @@ class ProvenanceStore:
         if path != ":memory:":
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         self._conn().executescript(_SCHEMA)
+        self._migrate(self._conn())
         self._conn().commit()
+
+    @staticmethod
+    def _migrate(conn: sqlite3.Connection) -> None:
+        """Bring pre-caching databases up to the current schema."""
+        cols = {r[1] for r in conn.execute("PRAGMA table_info(nodes)")}
+        if "node_hash" not in cols:
+            conn.execute("ALTER TABLE nodes ADD COLUMN node_hash TEXT")
+        # created here (not in _SCHEMA) so it runs after the column exists
+        conn.execute("CREATE INDEX IF NOT EXISTS idx_nodes_hash"
+                     " ON nodes(process_type, node_hash)")
 
     # -- connection handling (per-thread) -------------------------------------
     def _conn(self) -> sqlite3.Connection:
@@ -138,16 +150,18 @@ class ProvenanceStore:
 
     def create_process_node(self, node_type: NodeType, process_type: str,
                             label: str = "", description: str = "",
-                            attributes: dict | None = None) -> int:
+                            attributes: dict | None = None,
+                            node_hash: str | None = None) -> int:
         now = time.time()
         u = str(uuid_mod.uuid4())
         with self._lock:
             cur = self._conn().execute(
                 "INSERT INTO nodes (uuid, node_type, process_type, label,"
-                " description, attributes, process_state, ctime, mtime)"
-                " VALUES (?,?,?,?,?,?,?,?,?)",
+                " description, attributes, process_state, node_hash, ctime,"
+                " mtime) VALUES (?,?,?,?,?,?,?,?,?,?)",
                 (u, node_type.value, process_type, label, description,
-                 json.dumps(attributes or {}), "created", now, now))
+                 json.dumps(attributes or {}), "created", node_hash, now,
+                 now))
             self._conn().commit()
         return cur.lastrowid
 
@@ -166,13 +180,27 @@ class ProvenanceStore:
         if exit_message is not None:
             sets.append("exit_message=?")
             vals.append(exit_message)
-        if attributes is not None:
-            sets.append("attributes=?")
-            vals.append(json.dumps(attributes))
         vals.append(pk)
         with self._lock:
+            if attributes is not None:
+                # merge, don't replace — e.g. `cached_from` must survive the
+                # state-transition attribute writes
+                row = self._conn().execute(
+                    "SELECT attributes FROM nodes WHERE pk=?",
+                    (pk,)).fetchone()
+                merged = json.loads(row["attributes"] or "{}") if row else {}
+                merged.update(attributes)
+                sets.append("attributes=?")
+                vals.insert(-1, json.dumps(merged))
             self._conn().execute(
                 f"UPDATE nodes SET {', '.join(sets)} WHERE pk=?", vals)
+            self._conn().commit()
+
+    def set_node_hash(self, pk: int, node_hash: str | None) -> None:
+        with self._lock:
+            self._conn().execute(
+                "UPDATE nodes SET node_hash=?, mtime=? WHERE pk=?",
+                (node_hash, time.time(), pk))
             self._conn().commit()
 
     def save_checkpoint(self, pk: int, checkpoint: dict) -> None:
@@ -202,6 +230,17 @@ class ProvenanceStore:
             self._conn().execute(
                 "INSERT INTO links (in_id, out_id, link_type, label)"
                 " VALUES (?,?,?,?)", (in_pk, out_pk, link_type.value, label))
+            self._conn().commit()
+
+    def delete_outgoing_links(self, in_pk: int,
+                              link_types: Iterable[LinkType]) -> None:
+        """Remove typed edges leaving a node (cache-clone rollback)."""
+        types = [lt.value for lt in link_types]
+        marks = ",".join("?" * len(types))
+        with self._lock:
+            self._conn().execute(
+                f"DELETE FROM links WHERE in_id=? AND link_type IN ({marks})",
+                [in_pk, *types])
             self._conn().commit()
 
     # -- logs ----------------------------------------------------------------------
@@ -287,6 +326,16 @@ class QueryBuilder:
             t = node_type.value if isinstance(node_type, NodeType) else node_type
             self._wheres.append("node_type LIKE ?")
             self._args.append(f"{t}%")
+        return self
+
+    def with_process_type(self, process_type: str) -> "QueryBuilder":
+        self._wheres.append("process_type=?")
+        self._args.append(process_type)
+        return self
+
+    def with_hash(self, node_hash: str) -> "QueryBuilder":
+        self._wheres.append("node_hash=?")
+        self._args.append(node_hash)
         return self
 
     def with_state(self, state: str) -> "QueryBuilder":

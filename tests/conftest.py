@@ -6,6 +6,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import pytest  # noqa: E402
 
 
+@pytest.fixture(autouse=True)
+def _reset_caching_state(monkeypatch):
+    """Caching is policy-gated global state; isolate it per test."""
+    from repro.caching.config import ENV_VAR, reset_policy
+
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    reset_policy()
+    yield
+    reset_policy()
+
+
 @pytest.fixture()
 def store():
     """Fresh in-memory provenance store + default runner per test."""

@@ -1,0 +1,510 @@
+"""Content-addressed process caching (ISSUE 1 tentpole).
+
+Covers: hash stability and sensitivity, cache-hit output cloning with
+`cached_from` provenance, policy scoping (context manager, env var,
+per-type), invalidation, the CalcJob scheduler-skip fast path and a
+daemon-worker cache hit across OS processes."""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.caching import (
+    CacheRegistry, compute_input_hash, disable_caching, enable_caching,
+    get_policy, hash_data_value,
+)
+from repro.core import (
+    ArrayData, Bool, Dict, Float, FolderData, Int, List, Process,
+    ProcessSpec, Str, WorkChain, calcfunction, workfunction,
+)
+from repro.provenance.store import LinkType, NodeType
+
+TERMINAL = ("finished", "excepted", "killed")
+
+
+class Doubler(Process):
+    NODE_TYPE = NodeType.CALC_FUNCTION
+    executions = 0
+
+    @classmethod
+    def define(cls, spec: ProcessSpec) -> None:
+        super().define(spec)
+        spec.input("x", valid_type=Int)
+        spec.output("y", valid_type=Int)
+
+    async def run(self):
+        type(self).executions += 1
+        self.out("y", Int(self.inputs["x"].value * 2))
+
+
+@pytest.fixture(autouse=True)
+def _reset_counter():
+    Doubler.executions = 0
+
+
+# ---------------------------------------------------------------------------
+# hashing: stability and sensitivity
+# ---------------------------------------------------------------------------
+
+class TestHashing:
+    def test_same_inputs_same_hash(self, store):
+        h1 = compute_input_hash(Doubler, {"x": Int(3)})
+        h2 = compute_input_hash(Doubler, {"x": Int(3)})
+        assert h1 == h2
+
+    def test_changed_port_value_changes_hash(self, store):
+        assert compute_input_hash(Doubler, {"x": Int(3)}) != \
+            compute_input_hash(Doubler, {"x": Int(4)})
+
+    def test_value_type_is_part_of_hash(self, store):
+        assert hash_data_value(Int(1)) != hash_data_value(Float(1.0))
+        assert hash_data_value(Bool(True)) != hash_data_value(Int(1))
+
+    def test_scalar_hashes_stable_across_instances(self):
+        for make in (lambda: Int(7), lambda: Float(2.5), lambda: Str("a"),
+                     lambda: Bool(True), lambda: Dict({"k": [1, 2]}),
+                     lambda: List([1, "x"])):
+            assert hash_data_value(make()) == hash_data_value(make())
+
+    def test_array_hash_covers_dtype_shape_bytes(self):
+        a = ArrayData(np.arange(6, dtype=np.float32))
+        same = ArrayData(np.arange(6, dtype=np.float32))
+        assert hash_data_value(a) == hash_data_value(same)
+        # any changed byte
+        flipped = np.arange(6, dtype=np.float32)
+        flipped[3] += 1e-6
+        assert hash_data_value(a) != hash_data_value(ArrayData(flipped))
+        # dtype
+        assert hash_data_value(a) != \
+            hash_data_value(ArrayData(np.arange(6, dtype=np.float64)))
+        # shape (same bytes)
+        assert hash_data_value(ArrayData(np.zeros((2, 3)))) != \
+            hash_data_value(ArrayData(np.zeros((3, 2))))
+
+    def test_folder_hash(self):
+        f1 = FolderData({"a.txt": b"xx", "b.txt": b"yy"})
+        f2 = FolderData({"b.txt": b"yy", "a.txt": b"xx"})
+        assert hash_data_value(f1) == hash_data_value(f2)
+        assert hash_data_value(f1) != \
+            hash_data_value(FolderData({"a.txt": b"xy", "b.txt": b"yy"}))
+
+    def test_process_version_salts_hash(self, store, monkeypatch):
+        h1 = compute_input_hash(Doubler, {"x": Int(3)})
+        monkeypatch.setattr(Doubler, "CACHE_VERSION", 2)
+        assert compute_input_hash(Doubler, {"x": Int(3)}) != h1
+
+    def test_same_name_different_module_distinct(self, store):
+        class Doppel(Doubler):
+            pass
+
+        Doppel.__name__ = Doubler.__name__
+        Doppel.__qualname__ = Doubler.__qualname__
+        Doppel.__module__ = "somewhere.else"
+        assert compute_input_hash(Doubler, {"x": Int(3)}) != \
+            compute_input_hash(Doppel, {"x": Int(3)})
+
+    def test_process_type_in_hash(self, store):
+        class Tripler(Doubler):
+            pass
+
+        assert compute_input_hash(Doubler, {"x": Int(3)}) != \
+            compute_input_hash(Tripler, {"x": Int(3)})
+
+    def test_metadata_and_non_db_excluded(self, store):
+        class WithMeta(Doubler):
+            @classmethod
+            def define(cls, spec):
+                super().define(spec)
+                spec.input("opts", valid_type=dict, non_db=True,
+                           required=False, default=dict)
+
+        h1 = compute_input_hash(WithMeta, {"x": Int(1), "opts": {"a": 1},
+                                           "metadata": {"label": "l1"}})
+        h2 = compute_input_hash(WithMeta, {"x": Int(1), "opts": {"a": 2},
+                                           "metadata": {"label": "l2"}})
+        assert h1 == h2
+
+    def test_function_source_salts_hash(self, store):
+        @calcfunction
+        def body_a(x):
+            return x.value + 1
+
+        @calcfunction
+        def body_b(x):
+            return x.value + 2
+
+        body_b.process_class.__name__ = body_a.process_class.__name__
+        assert compute_input_hash(body_a.process_class, {"x": Int(1)}) != \
+            compute_input_hash(body_b.process_class, {"x": Int(1)})
+
+    def test_nested_metadata_key_is_hashed(self, store):
+        class DynIn(Doubler):
+            @classmethod
+            def define(cls, spec):
+                super().define(spec)
+                spec.inputs.dynamic = True
+
+        h1 = compute_input_hash(DynIn, {"x": Int(1),
+                                        "cfg": {"metadata": Str("v1")}})
+        h2 = compute_input_hash(DynIn, {"x": Int(1),
+                                        "cfg": {"metadata": Str("v2")}})
+        assert h1 != h2   # only the *top-level* metadata ns is excluded
+
+    def test_hash_persisted_on_node(self, store, runner):
+        outputs, proc = runner.run(Doubler, {"x": Int(5)})
+        node = store.get_node(proc.pk)
+        assert node["node_hash"] == proc._input_hash
+        assert node["node_hash"] is not None
+
+
+# ---------------------------------------------------------------------------
+# cache hits: cloning + provenance
+# ---------------------------------------------------------------------------
+
+class TestCacheHit:
+    def test_hit_skips_execution_and_clones_outputs(self, store, runner):
+        with enable_caching():
+            out1, p1 = runner.run(Doubler, {"x": Int(21)})
+            out2, p2 = runner.run(Doubler, {"x": Int(21)})
+        assert Doubler.executions == 1
+        assert p2.is_finished_ok
+        assert out2["y"].value == 42
+        # outputs are fresh nodes, not shared with the original
+        assert out2["y"].pk != out1["y"].pk
+        # linked with the normal CREATE edge
+        created = store.outgoing(p2.pk, LinkType.CREATE)
+        assert [(lbl, pk) for pk, _, lbl in created] == [("y", out2["y"].pk)]
+
+    def test_cached_from_metadata(self, store, runner):
+        with enable_caching():
+            _, p1 = runner.run(Doubler, {"x": Int(1)})
+            _, p2 = runner.run(Doubler, {"x": Int(1)})
+        attrs = json.loads(store.get_node(p2.pk)["attributes"])
+        assert attrs["cached_from_pk"] == p1.pk
+        assert attrs["cached_from"] == store.get_node(p1.pk)["uuid"]
+        src = store.get_node(p1.pk)
+        assert src["process_state"] == "finished"
+        assert src["exit_status"] == 0
+        # the original was computed, not cloned
+        assert "cached_from" not in json.loads(src["attributes"])
+
+    def test_miss_on_different_inputs(self, store, runner):
+        with enable_caching():
+            runner.run(Doubler, {"x": Int(1)})
+            _, p2 = runner.run(Doubler, {"x": Int(2)})
+        assert Doubler.executions == 2
+        assert "cached_from" not in \
+            json.loads(store.get_node(p2.pk)["attributes"])
+
+    def test_failed_processes_are_not_cache_sources(self, store, runner):
+        class Flaky(Doubler):
+            fail = True
+
+            async def run(self):
+                type(self).executions += 1
+                if type(self).fail:
+                    return 7
+                self.out("y", Int(self.inputs["x"].value * 2))
+
+        with enable_caching():
+            _, p1 = runner.run(Flaky, {"x": Int(1)})
+            assert p1.exit_code.status == 7
+            Flaky.fail = False
+            _, p2 = runner.run(Flaky, {"x": Int(1)})
+        assert Flaky.executions == 2   # failure was not reused
+        assert p2.is_finished_ok
+
+    def test_calcfunction_hit_returns_cloned_result(self, store, runner):
+        calls = []
+
+        @calcfunction
+        def add(a, b):
+            calls.append(1)
+            return a.value + b.value
+
+        with enable_caching():
+            r1 = add(Int(2), Int(3))
+            r2 = add(Int(2), Int(3))
+        assert len(calls) == 1
+        assert r1.value == r2.value == 5
+        assert r2.pk != r1.pk
+
+    def test_calcfunction_hit_preserves_dict_return_shape(self, store,
+                                                          runner):
+        @calcfunction
+        def wrapped(x):
+            return {"result": Int(x.value + 1)}
+
+        @calcfunction
+        def multi(x):
+            return {"a": Int(x.value), "b": Int(-x.value)}
+
+        with enable_caching():
+            cold = wrapped(Int(1))
+            warm = wrapped(Int(1))
+            assert isinstance(cold, dict) and isinstance(warm, dict)
+            assert warm["result"].value == 2
+
+            cold_m = multi(Int(3))
+            warm_m = multi(Int(3))
+        assert set(cold_m) == set(warm_m) == {"a", "b"}
+        assert warm_m["a"].value == 3 and warm_m["b"].value == -3
+
+    def test_flat_label_containing_dunder_stays_flat(self, store, runner):
+        @calcfunction
+        def dyn(x):
+            return {"a__b": Int(x.value)}
+
+        with enable_caching():
+            cold = dyn(Int(4))
+            warm = dyn(Int(4))
+        assert set(cold) == set(warm) == {"a__b"}
+        assert warm["a__b"].value == 4
+
+    def test_run_get_node_shape_on_hit(self, store, runner):
+        @calcfunction
+        def pair(x):
+            return {"a": x.value, "b": x.value + 1}
+
+        with enable_caching():
+            r1, p1, _ = pair.run_get_node(Int(1))
+            r2, p2, _ = pair.run_get_node(Int(1))
+        assert isinstance(r1, Dict) and isinstance(r2, Dict)
+        assert r1.value == r2.value == {"a": 1, "b": 2}
+        assert "cached_from" in json.loads(
+            store.get_node(p2.pk)["attributes"])
+
+    def test_invalidate_stops_reuse(self, store, runner):
+        reg = CacheRegistry(store)
+        with enable_caching():
+            _, p1 = runner.run(Doubler, {"x": Int(9)})
+            assert reg.invalidate(pk=p1.pk) == 1
+            runner.run(Doubler, {"x": Int(9)})
+        assert Doubler.executions == 2
+
+    def test_invalidate_by_process_type(self, store, runner):
+        with enable_caching():
+            runner.run(Doubler, {"x": Int(1)})
+            runner.run(Doubler, {"x": Int(2)})
+            n = CacheRegistry(store).invalidate(process_type="Doubler")
+            assert n == 2
+            runner.run(Doubler, {"x": Int(1)})
+        assert Doubler.executions == 3
+
+    def test_stats(self, store, runner):
+        reg = CacheRegistry(store)
+        with enable_caching():
+            runner.run(Doubler, {"x": Int(1)})
+            runner.run(Doubler, {"x": Int(1)})
+            runner.run(Doubler, {"x": Int(2)})
+        s = reg.stats()
+        row = s["process_types"]["Doubler"]
+        assert row["hashed_nodes"] == 3
+        assert row["distinct_hashes"] == 2
+        assert row["cache_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# policy scoping
+# ---------------------------------------------------------------------------
+
+class TestPolicy:
+    def test_caching_off_by_default(self, store, runner):
+        runner.run(Doubler, {"x": Int(3)})
+        runner.run(Doubler, {"x": Int(3)})
+        assert Doubler.executions == 2
+
+    def test_enable_caching_scopes(self, store, runner):
+        with enable_caching():
+            runner.run(Doubler, {"x": Int(3)})
+            runner.run(Doubler, {"x": Int(3)})
+        assert Doubler.executions == 1
+        runner.run(Doubler, {"x": Int(3)})   # outside the scope
+        assert Doubler.executions == 2
+
+    def test_enable_caching_for_specific_type(self, store, runner):
+        class Other(Doubler):
+            executions = 0
+
+        with enable_caching("Other"):
+            runner.run(Doubler, {"x": Int(1)})
+            runner.run(Doubler, {"x": Int(1)})
+            runner.run(Other, {"x": Int(1)})
+            runner.run(Other, {"x": Int(1)})
+        assert Doubler.executions == 2
+        assert Other.executions == 1
+
+    def test_disable_overrides_inner_scope(self, store, runner):
+        with enable_caching():
+            with disable_caching(Doubler):
+                runner.run(Doubler, {"x": Int(1)})
+                runner.run(Doubler, {"x": Int(1)})
+        assert Doubler.executions == 2
+
+    def test_env_var_enables(self, store, runner, monkeypatch):
+        monkeypatch.setenv("REPRO_CACHING", "1")
+        runner.run(Doubler, {"x": Int(1)})
+        runner.run(Doubler, {"x": Int(1)})
+        assert Doubler.executions == 1
+
+    def test_env_var_type_list(self, store, runner, monkeypatch):
+        class Other(Doubler):
+            executions = 0
+
+        monkeypatch.setenv("REPRO_CACHING", "Other,SomethingElse")
+        runner.run(Doubler, {"x": Int(1)})
+        runner.run(Doubler, {"x": Int(1)})
+        runner.run(Other, {"x": Int(1)})
+        runner.run(Other, {"x": Int(1)})
+        assert Doubler.executions == 2
+        assert Other.executions == 1
+
+    def test_policy_object_opt_in(self, store, runner):
+        get_policy().enable("Doubler")
+        runner.run(Doubler, {"x": Int(1)})
+        runner.run(Doubler, {"x": Int(1)})
+        assert Doubler.executions == 1
+
+    def test_workflows_never_cached(self, store, runner):
+        ran = []
+
+        class Chain(WorkChain):
+            @classmethod
+            def define(cls, spec):
+                super().define(spec)
+                spec.input("x", valid_type=Int)
+                spec.output("y", valid_type=Int)
+                spec.outline(cls.go)
+
+            def go(self):
+                ran.append(1)
+                self.out("y", Int(self.inputs["x"].value))
+
+        with enable_caching():
+            runner.run(Chain, {"x": Int(1)})
+            runner.run(Chain, {"x": Int(1)})
+        assert len(ran) == 2
+
+        @workfunction
+        def orchestrate(x):
+            ran.append(1)
+            return x
+
+        with enable_caching():
+            orchestrate(Int(1))
+            orchestrate(Int(1))
+        assert len(ran) == 4
+
+    def test_cacheable_false_opts_out(self, store, runner):
+        class NonDeterministic(Doubler):
+            CACHEABLE = False
+            executions = 0
+
+        with enable_caching():
+            runner.run(NonDeterministic, {"x": Int(1)})
+            runner.run(NonDeterministic, {"x": Int(1)})
+        assert NonDeterministic.executions == 2
+
+
+# ---------------------------------------------------------------------------
+# CalcJob fast path: no scheduler submission on a hit
+# ---------------------------------------------------------------------------
+
+class TestCalcJobCaching:
+    def test_hit_skips_scheduler_entirely(self, store, runner):
+        from repro.calcjobs.calcjob import CalcInfo, CalcJob, get_cluster
+        from repro.core import FolderData, Str
+
+        class EchoJob(CalcJob):
+            @classmethod
+            def define(cls, spec):
+                super().define(spec)
+                spec.input("text", valid_type=Str)
+                spec.output("echoed", valid_type=Str)
+
+            def prepare_for_submission(self):
+                return CalcInfo(
+                    files={"in.txt": self.inputs["text"].value.encode()},
+                    executable="echo", retrieve_list=["in.txt"])
+
+            def parse(self, retrieved: FolderData):
+                self.out("echoed",
+                         Str(retrieved.get_bytes("in.txt").decode()))
+
+        get_cluster(runner).register_executable(
+            "echo", lambda inputs: dict(inputs))
+
+        async def drive(proc):
+            return await proc.step_until_terminated()
+
+        with enable_caching():
+            p1 = EchoJob({"text": Str("hello")}, runner=runner)
+            runner.run_until_complete(drive(p1))
+            assert p1.is_finished_ok
+            n_jobs_after_first = len(get_cluster(runner).jobs)
+            assert n_jobs_after_first >= 1
+
+            p2 = EchoJob({"text": Str("hello")}, runner=runner)
+            runner.run_until_complete(drive(p2))
+        assert p2.is_finished_ok
+        assert p2.outputs["echoed"].value == "hello"
+        # no new scheduler job, no new upload
+        assert len(get_cluster(runner).jobs) == n_jobs_after_first
+        attrs = json.loads(store.get_node(p2.pk)["attributes"])
+        assert attrs["cached_from_pk"] == p1.pk
+        # the retrieved folder was cloned too
+        labels = {lbl for _, _, lbl in store.outgoing(p2.pk,
+                                                      LinkType.CREATE)}
+        assert labels == {"retrieved", "echoed"}
+
+
+# ---------------------------------------------------------------------------
+# daemon: a worker in another OS process takes the fast path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_daemon_worker_cache_hit_skips_execution(tmp_path, monkeypatch):
+    from repro.calcjobs import TPUTrainJob
+    from repro.engine.daemon import Daemon
+    from repro.provenance.store import configure_store
+
+    monkeypatch.setenv("REPRO_CACHING", "TPUTrainJob")
+    cfg = {"arch": "qwen2-0.5b", "steps": 1, "batch": 1, "seq": 8,
+           "seed": 0}
+
+    daemon = Daemon(str(tmp_path), workers=1, slots=8)
+    daemon.start()
+    try:
+        store = configure_store(daemon.store_path)
+
+        def wait(pk, timeout=150):
+            t0 = time.time()
+            while time.time() - t0 < timeout:
+                node = store.get_node(pk)
+                if node and node["process_state"] in TERMINAL:
+                    return node
+                daemon.supervise()
+                time.sleep(0.3)
+            raise TimeoutError(f"process {pk} did not finish")
+
+        pk1 = daemon.submit(TPUTrainJob, {"config": Dict(cfg)})
+        n1 = wait(pk1)
+        assert n1["process_state"] == "finished" and n1["exit_status"] == 0
+
+        t0 = time.time()
+        pk2 = daemon.submit(TPUTrainJob, {"config": Dict(cfg)})
+        n2 = wait(pk2)
+        warm = time.time() - t0
+        assert n2["process_state"] == "finished" and n2["exit_status"] == 0
+        attrs = json.loads(n2["attributes"])
+        assert attrs["cached_from_pk"] == pk1
+        # executed runs log upload/submit reports; a cache hit only logs
+        # the hit itself — proof the worker skipped execution
+        messages = " ".join(l["message"] for l in store.get_logs(pk2))
+        assert "cache hit" in messages
+        assert "submitted as job" not in messages
+        assert warm < 30
+    finally:
+        daemon.stop()

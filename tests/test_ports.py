@@ -1,7 +1,7 @@
 """Port / PortNamespace / ProcessSpec behaviour (paper §II.A)."""
 
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, strategies as st
 
 from repro.core import Int, Float, ProcessSpec
 from repro.core.ports import InputPort, PortNamespace

@@ -1,7 +1,7 @@
 """Provenance store: nodes, links, logs, QueryBuilder, graph invariants."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st  # noqa: E501
 
 from repro.core import ArrayData, Dict, Float, Int, Str
 from repro.core.datatypes import DataValue, FolderData, to_data_value

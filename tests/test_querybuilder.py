@@ -1,0 +1,147 @@
+"""QueryBuilder coverage (ISSUE 1 satellite): ordering, limiting,
+first/count, and queries over the node_hash column."""
+
+import pytest
+
+from repro.provenance.store import NodeType, ProvenanceStore, QueryBuilder
+
+
+@pytest.fixture()
+def populated():
+    store = ProvenanceStore(":memory:")
+    pks = {}
+    for i in range(5):
+        pks[f"calc{i}"] = store.create_process_node(
+            NodeType.CALC_FUNCTION, process_type="Adder",
+            label=f"calc-{i}", node_hash=f"hash-{i % 2}")
+    pks["work"] = store.create_process_node(
+        NodeType.WORK_CHAIN, process_type="Chain", label="chain",
+        node_hash=None)
+    store.update_process(pks["calc0"], state="finished", exit_status=0)
+    store.update_process(pks["calc1"], state="finished", exit_status=0)
+    store.update_process(pks["calc2"], state="excepted", exit_status=999)
+    return store, pks
+
+
+class TestQueryBuilder:
+    def test_count(self, populated):
+        store, _ = populated
+        assert QueryBuilder(store).count() == 6
+        assert QueryBuilder(store).nodes("process").count() == 6
+        assert QueryBuilder(store).nodes(NodeType.CALC_FUNCTION).count() == 5
+        assert QueryBuilder(store).nodes(NodeType.DATA).count() == 0
+
+    def test_order_by_pk_desc(self, populated):
+        store, pks = populated
+        rows = QueryBuilder(store).order_by("pk", desc=True).all()
+        assert [r["pk"] for r in rows] == sorted(
+            (r["pk"] for r in rows), reverse=True)
+        assert rows[0]["pk"] == pks["work"]
+
+    def test_order_by_rejects_unknown_field(self, populated):
+        store, _ = populated
+        with pytest.raises(AssertionError):
+            QueryBuilder(store).order_by("attributes; DROP TABLE nodes")
+
+    def test_order_by_mtime(self, populated):
+        store, pks = populated
+        # update_process bumps mtime, so the excepted node sorts last
+        rows = QueryBuilder(store).order_by("mtime", desc=True).all()
+        assert rows[0]["pk"] == pks["calc2"]
+
+    def test_limit(self, populated):
+        store, _ = populated
+        assert len(QueryBuilder(store).limit(2).all()) == 2
+        assert len(QueryBuilder(store).limit(100).all()) == 6
+
+    def test_first(self, populated):
+        store, pks = populated
+        first = QueryBuilder(store).nodes(NodeType.CALC_FUNCTION) \
+            .order_by("pk").first()
+        assert first["pk"] == pks["calc0"]
+        assert QueryBuilder(store).with_state("nonexistent").first() is None
+
+    def test_filter_chaining(self, populated):
+        store, _ = populated
+        n = (QueryBuilder(store).nodes(NodeType.CALC_FUNCTION)
+             .with_state("finished").with_exit_status(0).count())
+        assert n == 2
+
+    def test_with_label(self, populated):
+        store, pks = populated
+        rows = QueryBuilder(store).with_label("chain").all()
+        assert [r["pk"] for r in rows] == [pks["work"]]
+
+    # -- node_hash column ----------------------------------------------------
+    def test_with_hash(self, populated):
+        store, _ = populated
+        rows = QueryBuilder(store).with_hash("hash-0").all()
+        assert len(rows) == 3
+        assert all(r["node_hash"] == "hash-0" for r in rows)
+        assert QueryBuilder(store).with_hash("hash-1").count() == 2
+        assert QueryBuilder(store).with_hash("missing").count() == 0
+
+    def test_with_process_type_and_hash(self, populated):
+        store, pks = populated
+        row = (QueryBuilder(store).with_process_type("Adder")
+               .with_hash("hash-0").with_state("finished")
+               .with_exit_status(0).order_by("pk", desc=True).first())
+        assert row["pk"] == pks["calc0"]
+
+    def test_hash_column_survives_roundtrip(self, tmp_path):
+        path = str(tmp_path / "qb.db")
+        store = ProvenanceStore(path)
+        pk = store.create_process_node(NodeType.CALC_JOB, "Job",
+                                       node_hash="abc123")
+        store.close()
+        reopened = ProvenanceStore(path)
+        assert reopened.get_node(pk)["node_hash"] == "abc123"
+        assert QueryBuilder(reopened).with_hash("abc123").count() == 1
+
+    def test_set_node_hash_and_invalidation_query(self, populated):
+        store, pks = populated
+        store.set_node_hash(pks["calc0"], None)
+        assert QueryBuilder(store).with_hash("hash-0").count() == 2
+        store.set_node_hash(pks["calc3"], "rehashed")
+        assert QueryBuilder(store).with_hash("rehashed").count() == 1
+
+
+def test_migration_adds_node_hash_to_legacy_db(tmp_path):
+    """A database created before the caching subsystem gains the column
+    (and index) on open."""
+    import sqlite3
+
+    path = str(tmp_path / "legacy.db")
+    conn = sqlite3.connect(path)
+    conn.executescript("""
+        CREATE TABLE nodes (
+            pk INTEGER PRIMARY KEY AUTOINCREMENT,
+            uuid TEXT UNIQUE NOT NULL,
+            node_type TEXT NOT NULL,
+            process_type TEXT,
+            label TEXT DEFAULT '',
+            description TEXT DEFAULT '',
+            attributes TEXT DEFAULT '{}',
+            payload TEXT,
+            process_state TEXT,
+            exit_status INTEGER,
+            exit_message TEXT,
+            checkpoint TEXT,
+            ctime REAL NOT NULL,
+            mtime REAL NOT NULL
+        );
+        INSERT INTO nodes (uuid, node_type, process_type, process_state,
+                           ctime, mtime)
+        VALUES ('u-1', 'process.calcjob', 'OldJob', 'finished', 1.0, 1.0);
+    """)
+    conn.commit()
+    conn.close()
+
+    store = ProvenanceStore(path)
+    node = store.get_node(1)
+    assert node["node_hash"] is None           # legacy rows: no fingerprint
+    store.set_node_hash(1, "backfilled")
+    assert QueryBuilder(store).with_hash("backfilled").count() == 1
+    indexes = {r[1] for r in
+               store._conn().execute("PRAGMA index_list(nodes)")}
+    assert "idx_nodes_hash" in indexes

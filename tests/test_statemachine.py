@@ -1,7 +1,7 @@
 """Extended-FSM invariants (paper §III.B fig. 6), incl. hypothesis walks."""
 
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, strategies as st
 
 from repro.core.statemachine import (
     InvalidTransitionError, ProcessState, StateMachine, TERMINAL_STATES,
