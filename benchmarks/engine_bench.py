@@ -8,6 +8,8 @@ One function per claim ("table"):
   B5 transport-queue + job-manager bundling (connection/query counts)
   B6 robustness: completion under fault injection (backoff, §II.B.4.a)
   B7 checkpoint save/restore throughput (engine + tensor level)
+  B8 remote terminal-notification latency through the broker (§III.C):
+     Runner.wait unblocks at event-delivery time, not a poll interval
 """
 
 from __future__ import annotations
@@ -267,6 +269,69 @@ def bench_checkpointing():
                        f"process-ckpt={t_proc*1e3:.2f}ms"}
 
 
+def bench_remote_wait_latency(n=30):
+    """B8: terminal-notification latency for a REMOTE process — the waiter
+    holds no local handle, so completion must travel as a broadcast
+    through the broker. p50 must sit at event-delivery time (< 50 ms),
+    not at the old ~2 s poll-interval floor."""
+    import os
+    import tempfile
+
+    from repro.engine.broker import BrokerClient, BrokerServer
+    from repro.engine.runner import Runner
+    from repro.provenance.store import configure_store
+    from repro.core import Int
+
+    Noop = _NoopChain.get()
+
+    async def main(tmpdir):
+        server = BrokerServer(os.path.join(tmpdir, "broker.db"))
+        host, port = await server.start()
+        worker = BrokerClient(host, port)
+        await worker.connect()
+        waiter = BrokerClient(host, port)
+        await waiter.connect()
+        store = configure_store(":memory:")
+        runner_w = Runner(store=store, communicator=worker)
+        runner_c = Runner(store=store, communicator=waiter)
+
+        emitted: dict[int, float] = {}
+
+        def stamp(subject, sender, body):
+            if body.get("state") in ("finished", "excepted", "killed"):
+                emitted[body["pk"]] = body["ts"]
+
+        waiter.add_broadcast_subscriber(stamp, "state_changed.*")
+
+        lats = []
+        for i in range(n):
+            handle = runner_w.submit(Noop, {"n": Int(i)})
+            assert handle.pk not in runner_c._processes
+            await runner_c.wait(handle.pk)
+            # latency: wait unblocked minus the terminal broadcast's
+            # emission stamp — the pure control-plane delivery time
+            lats.append(time.time() - emitted[handle.pk])
+        worker.close()
+        waiter.close()
+        await server.stop()
+        return lats
+
+    with tempfile.TemporaryDirectory() as tmpdir:
+        loop = asyncio.new_event_loop()
+        try:
+            lats = loop.run_until_complete(main(tmpdir))
+        finally:
+            loop.close()
+    lats.sort()
+    p50 = lats[len(lats) // 2]
+    p95 = lats[int(len(lats) * 0.95)]
+    assert p50 < 0.050, f"p50 wait latency {p50*1e3:.1f}ms >= 50ms"
+    return {"name": "remote_wait_latency",
+            "us_per_call": p50 * 1e6,
+            "derived": f"p50={p50*1e3:.2f}ms p95={p95*1e3:.2f}ms over "
+                       f"{n} remote waits (old poll floor was ~2000ms)"}
+
+
 ALL = [
     bench_engine_throughput,
     bench_slot_scaling,
@@ -275,4 +340,5 @@ ALL = [
     bench_bundling,
     bench_fault_injection,
     bench_checkpointing,
+    bench_remote_wait_latency,
 ]

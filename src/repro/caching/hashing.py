@@ -14,7 +14,9 @@ dtype + shape + raw bytes (so two equal arrays stored separately collide,
 as they should), folders digest their sorted (name, bytes) pairs, and
 scalar types digest their canonical JSON payload. ``non_db`` ports and the
 ``metadata`` namespace are excluded — they describe *how* to run, not
-*what* is computed.
+*what* is computed — as are ports declared with ``exclude_from_hash=True``
+(tolerances/thresholds that are stored in provenance but do not affect the
+result).
 """
 
 from __future__ import annotations
@@ -68,6 +70,10 @@ def _canonicalize(ns: PortNamespace | None, values: Mapping[str, Any],
             continue  # only the *top-level* metadata namespace is excluded
         port = ns.get(key) if ns is not None else None
         if port is not None and port.non_db:
+            continue
+        if port is not None and getattr(port, "exclude_from_hash", False):
+            # declared as not affecting the result (tolerance/threshold):
+            # stored and linked in provenance, but not fingerprinted
             continue
         if isinstance(port, PortNamespace) and isinstance(value, Mapping) \
                 and not isinstance(value, DataValue):

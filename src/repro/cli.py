@@ -10,15 +10,23 @@
     PYTHONPATH=src python -m repro.cli -p <profile.db> cache show <pk>
     PYTHONPATH=src python -m repro.cli -p <profile.db> cache invalidate --process-type Foo
 
+Control-plane verbs (the event-driven engine surface):
+
+    repro -p <profile.db> process pause|play|kill|status <pk> [-w WORKDIR]
+    repro -p <profile.db> process watch [--pk PK] [--once] [--timeout T]
+
 Mirrors the AiiDA `verdi process ...` verbs the paper's users drive the
-engine with. Control verbs (pause/play/kill) require a running daemon and
-go through the broker's RPC channel.
+engine with. Control verbs go through the broker's RPC channel to whichever
+daemon worker owns the process; `watch` tails the state_changed.<pk>.<state>
+broadcast stream live. WORKDIR is the daemon working directory holding
+broker.json (default: the directory of the profile db).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -145,6 +153,101 @@ def cmd_graph_export(store: ProvenanceStore, args) -> None:
         print(out)
 
 
+def _controller(args):
+    from repro.engine.controller import NoRunningDaemon, ProcessController
+
+    workdir = args.workdir or os.path.dirname(os.path.abspath(args.profile))
+    try:
+        return ProcessController.from_workdir(workdir)
+    except NoRunningDaemon as exc:
+        sys.exit(str(exc))
+
+
+def cmd_process_control(store: ProvenanceStore, args) -> None:
+    """pause / play / kill / status through the broker RPC channel."""
+    ctl = _controller(args)
+    try:
+        if args.sub == "status":
+            print(json.dumps(ctl.status(args.pk), indent=2))
+        elif args.sub == "kill":
+            message = args.message or "killed by user"
+            try:
+                ctl.kill(args.pk, message)
+                print(f"kill delivered to process {args.pk}")
+            except (KeyError, TimeoutError):
+                # not live on any worker (still queued, worker down, or
+                # worker unresponsive): record the kill durably — the
+                # process honours it at its next step boundary or pickup
+                from repro.engine.runner import TERMINAL
+                node = store.get_node(args.pk)
+                if node is None:
+                    sys.exit(f"no node with pk={args.pk}")
+                if node.get("process_state") in TERMINAL:
+                    sys.exit(f"process {args.pk} is already terminal "
+                             f"({node['process_state']})")
+                store.update_process(args.pk,
+                                     attributes={"kill_requested": message})
+                # a worker may have picked the process up (and read the
+                # marker) between our first attempt and the write above —
+                # retry once now that the marker is down
+                try:
+                    ctl.kill(args.pk, message)
+                    print(f"kill delivered to process {args.pk}")
+                except (KeyError, TimeoutError):
+                    print(f"process {args.pk} not live; kill recorded "
+                          "durably (applies at its next step boundary or "
+                          "worker pickup)")
+        elif args.sub == "pause":
+            ctl.pause(args.pk)
+            print(f"pause delivered to process {args.pk}")
+        elif args.sub == "play":
+            ctl.play(args.pk)
+            print(f"play delivered to process {args.pk}")
+    except KeyError as exc:
+        sys.exit(f"process {args.pk} has no live control endpoint: {exc}")
+    except TimeoutError as exc:
+        sys.exit(str(exc))
+    finally:
+        ctl.close()
+
+
+def cmd_process_watch(store: ProvenanceStore, args) -> None:
+    """Tail state-change events live from the broker's event stream."""
+    from repro.engine.controller import NoRunningDaemon, ProcessController
+
+    workdir = args.workdir or os.path.dirname(os.path.abspath(args.profile))
+    try:
+        ctl = ProcessController.from_workdir(workdir)
+    except NoRunningDaemon as exc:
+        # `watch --once/--timeout` is used as a liveness probe (CI smoke):
+        # a missing daemon is an answer, not an error
+        if args.once or args.timeout is not None:
+            print(f"{exc} — no events to watch")
+            return
+        sys.exit(str(exc))
+    try:
+        seen = 0
+        for subject, sender, body in ctl.watch(
+                pk=args.pk, timeout=args.timeout,
+                replay_since=0 if args.replay else None):
+            stamp = time.strftime("%H:%M:%S",
+                                  time.localtime(body.get("ts", time.time())))
+            exit_status = body.get("exit_status")
+            suffix = "" if exit_status is None else f" (exit {exit_status})"
+            print(f"{stamp}  pk={sender}  "
+                  f"{body.get('from', '?')} -> {body.get('state', '?')}"
+                  f"{suffix}", flush=True)
+            seen += 1
+            if args.once:
+                return
+        if not seen:
+            print("no events within timeout")
+    except KeyboardInterrupt:
+        pass
+    finally:
+        ctl.close()
+
+
 def cmd_stats(store: ProvenanceStore, args) -> None:
     print("node counts:")
     for nt in NodeType:
@@ -219,6 +322,25 @@ def main(argv=None) -> None:
     pr.add_argument("pk", type=int)
     ps = proc_sub.add_parser("show")
     ps.add_argument("pk", type=int)
+    for verb in ("pause", "play", "kill", "status"):
+        pc = proc_sub.add_parser(verb)
+        pc.add_argument("pk", type=int)
+        pc.add_argument("-w", "--workdir", default=None,
+                        help="daemon workdir holding broker.json "
+                             "(default: profile directory)")
+        if verb == "kill":
+            pc.add_argument("--message", default="")
+    pw = proc_sub.add_parser("watch")
+    pw.add_argument("--pk", type=int, default=None)
+    pw.add_argument("--once", action="store_true",
+                    help="exit after the first event")
+    pw.add_argument("--timeout", type=float, default=None,
+                    help="stop watching after this many seconds")
+    pw.add_argument("--replay", action="store_true",
+                    help="first replay events the broker has logged")
+    pw.add_argument("-w", "--workdir", default=None,
+                    help="daemon workdir holding broker.json "
+                         "(default: profile directory)")
 
     p_node = sub.add_parser("node")
     node_sub = p_node.add_subparsers(dest="sub", required=True)
@@ -253,6 +375,11 @@ def main(argv=None) -> None:
         cmd_process_report(store, args)
     elif args.cmd == "process" and args.sub == "show":
         cmd_process_show(store, args)
+    elif args.cmd == "process" and args.sub in ("pause", "play", "kill",
+                                                "status"):
+        cmd_process_control(store, args)
+    elif args.cmd == "process" and args.sub == "watch":
+        cmd_process_watch(store, args)
     elif args.cmd == "node" and args.sub == "show":
         cmd_node_show(store, args)
     elif args.cmd == "graph" and args.sub == "export":

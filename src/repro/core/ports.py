@@ -25,7 +25,8 @@ class Port:
     def __init__(self, name: str, *, valid_type: type | tuple[type, ...] | None = None,
                  validator: Callable[[Any], str | None] | None = None,
                  default: Any = _NO_DEFAULT, required: bool = True,
-                 non_db: bool = False, help: str = ""):
+                 non_db: bool = False, exclude_from_hash: bool = False,
+                 help: str = ""):
         self.name = name
         if valid_type is not None and not isinstance(valid_type, tuple):
             valid_type = (valid_type,)
@@ -34,6 +35,10 @@ class Port:
         self._default = default
         self.required = required and default is _NO_DEFAULT
         self.non_db = non_db
+        # excluded from the caching input fingerprint (tolerances,
+        # thresholds, … — inputs that do not change what is computed);
+        # unlike non_db the value IS still stored and linked in provenance
+        self.exclude_from_hash = exclude_from_hash
         self.help = help
 
     # ------------------------------------------------------------------
@@ -82,11 +87,12 @@ class PortNamespace(Port, MutableMapping):
 
     def __init__(self, name: str = "", *, dynamic: bool = False,
                  required: bool = False, non_db: bool = False,
+                 exclude_from_hash: bool = False,
                  valid_type: Any = None, validator: Any = None,
                  default: Any = _NO_DEFAULT, help: str = ""):
         super().__init__(name, valid_type=valid_type, validator=validator,
                          default=default, required=required, non_db=non_db,
-                         help=help)
+                         exclude_from_hash=exclude_from_hash, help=help)
         self.dynamic = dynamic
         self._ports: dict[str, Port] = {}
 

@@ -16,6 +16,7 @@ from __future__ import annotations
 import asyncio
 import contextvars
 import json
+import time
 import traceback
 from typing import Any, Mapping
 
@@ -232,12 +233,16 @@ class Process(StateMachine):
             self._done.set()
         comm = getattr(self.runner, "communicator", None)
         if comm is not None:
+            from repro.engine.communicator import state_subject
             comm.broadcast_send(
-                subject=f"state_changed.{from_state.value}.{state.value}",
+                subject=state_subject(self.pk, state.value),
                 sender=self.pk,
-                body={"state": state.value,
+                body={"pk": self.pk,
+                      "from": from_state.value,
+                      "state": state.value,
                       "exit_status": (self._exit_code.status
-                                      if self._exit_code else None)})
+                                      if self._exit_code else None),
+                      "ts": time.time()})
 
     # -- checkpointing (paper §III.B.1, fig. 7) ---------------------------------------------
     def get_checkpoint(self) -> dict:
@@ -291,6 +296,60 @@ class Process(StateMachine):
         return self
 
     # -- external control (paper §III.C RPC) ---------------------------------------------------
+    def _control_handler(self, msg: dict) -> Any:
+        """The per-process RPC endpoint: any client reaching
+        ``process.<pk>`` (directly or forwarded through the broker) drives
+        this process with an intent message."""
+        from repro.engine.communicator import CONTROL_INTENTS, control_intent
+        intent = control_intent(msg)
+        if intent == "pause":
+            self.pause()
+            return True
+        if intent == "play":
+            self.play()
+            return True
+        if intent == "kill":
+            message = msg.get("message", "killed via RPC")
+            # durable first: should this worker die before the in-memory
+            # kill lands, no restarted worker may resurrect the process
+            try:
+                self.store.update_process(
+                    self.pk, attributes={"kill_requested": message})
+            except Exception:  # noqa: BLE001 — still honour the live kill
+                pass
+            self.kill(message)
+            return True
+        if intent == "status":
+            return {"pk": self.pk, "state": self.state.value,
+                    "paused": self.state is ProcessState.PAUSED,
+                    "exit_status": (self._exit_code.status
+                                    if self._exit_code else None)}
+        raise ValueError(f"unknown control intent {intent!r}; "
+                         f"expected one of {CONTROL_INTENTS}")
+
+    def _register_control(self) -> None:
+        comm = getattr(self.runner, "communicator", None)
+        if comm is not None:
+            from repro.engine.communicator import process_rpc_id
+            comm.add_rpc_subscriber(process_rpc_id(self.pk),
+                                    self._control_handler)
+
+    def _unregister_control(self) -> None:
+        comm = getattr(self.runner, "communicator", None)
+        if comm is not None:
+            from repro.engine.communicator import process_rpc_id
+            comm.remove_rpc_subscriber(process_rpc_id(self.pk))
+
+    def _kill_requested_durably(self) -> str | None:
+        """A kill recorded in the store by a control client — honoured on
+        (re)start so a kill survives worker crashes and restarts."""
+        try:
+            node = self.store.get_node(self.pk) or {}
+            attrs = json.loads(node.get("attributes") or "{}")
+            return attrs.get("kill_requested")
+        except Exception:  # noqa: BLE001
+            return None
+
     def pause(self) -> None:
         self._pause_requested = True
         self._play.clear()
@@ -311,7 +370,16 @@ class Process(StateMachine):
         self._play.set()
 
     async def _pause_point(self) -> None:
-        """Honour pause requests between steps; blocks while paused."""
+        """Honour pause and kill requests between steps; blocks while
+        paused. Under a daemon worker (distributed runner) also re-reads
+        the durable ``kill_requested`` marker, so a kill recorded while
+        this worker was racing to pick the process up (live RPC not yet
+        routable) still lands at the next step boundary rather than only
+        after a worker restart. Local runs skip the per-step store read —
+        their control RPCs arrive in-memory."""
+        if self._killed_msg is None and \
+                getattr(self.runner, "distributed", False):
+            self._killed_msg = self._kill_requested_durably()
         if self._killed_msg is not None:
             raise ProcessKilled(self._killed_msg)
         if self._pause_requested and not self.state.is_terminal:
@@ -393,7 +461,8 @@ class Process(StateMachine):
             # honest provenance: carry over the source's attributes and
             # advertise what this node was cloned from
             attrs = {k: v for k, v in src_attrs.items()
-                     if k not in ("paused", "cached_from", "cached_from_pk")}
+                     if k not in ("paused", "cached_from", "cached_from_pk",
+                                  "kill_requested")}
             attrs.update(cached_from=hit.uuid, cached_from_pk=hit.pk)
             self.store.update_process(self.pk, attributes=attrs)
             self.report("cache hit: cloned %d output(s) from %s<%d>",
@@ -411,7 +480,15 @@ class Process(StateMachine):
 
     async def step_until_terminated(self) -> ExitCode:
         token = CURRENT_PROCESS.set(self)
+        # every live process is reachable over RPC for its whole run —
+        # regardless of which runner/worker drives it (paper §III.C.b)
+        self._register_control()
         try:
+            # a kill recorded durably while no worker owned this process
+            # is applied before any work — no resurrection after restart
+            killed = self._kill_requested_durably()
+            if killed is not None:
+                raise ProcessKilled(killed)
             await self._pause_point()
             self.transition_to(ProcessState.RUNNING)
             exit_code = self._maybe_use_cache()
@@ -438,6 +515,7 @@ class Process(StateMachine):
             if not self.is_terminated:
                 self.transition_to(ProcessState.EXCEPTED)
         finally:
+            self._unregister_control()
             CURRENT_PROCESS.reset(token)
         return self._exit_code
 

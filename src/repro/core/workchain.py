@@ -399,8 +399,11 @@ class WorkChain(Process):
     async def _resolve_awaitables(self) -> None:
         pending = list(self._awaitables)
         self._awaitables.clear()
+        # one event-driven wait per child, all concurrent: the chain wakes
+        # when the LAST terminal broadcast arrives, not after a poll sweep
+        await self.interruptible(
+            self.runner.wait_all([aw.pk for aw in pending]))
         for aw in pending:
-            await self.interruptible(self.runner.wait_for_process(aw.pk))
             view = ProcessNodeView(self.store, aw.pk)
             if aw.append:
                 self.ctx.setdefault(aw.key, []).append(view)

@@ -8,8 +8,14 @@ patterns with RabbitMQ-faithful guarantees:
   is presumed dead and its un-acked tasks are requeued (paper: "upon
   missing two consecutive responses, RabbitMQ assumes the worker to be
   dead and triggers the rescheduling mechanism").
-* **RPC** — request/response routed by subscriber identifier.
-* **broadcast** — fan-out to all connected clients.
+* **RPC** — request/response routed by subscriber identifier, forwarded
+  across OS processes: any client can reach ``process.<pk>`` wherever the
+  owning worker runs (paper §III.C.b). ``rpc_lookup`` queries the live
+  identifier directory, which is how workers advertise the pks they own.
+* **broadcast** — fan-out to all connected clients, durably: every event
+  is appended to a sqlite log with a monotonic sequence number, and a
+  client can replay missed events with ``events_since`` (so a watcher
+  that reconnects sees what happened while it was away).
 
 Protocol: newline-delimited JSON over TCP (loopback). This is deliberately
 boring; the durability lives in sqlite (WAL), the liveness in heartbeats.
@@ -18,14 +24,16 @@ boring; the durability lives in sqlite (WAL), the liveness in heartbeats.
 from __future__ import annotations
 
 import asyncio
+import fnmatch
 import itertools
 import json
 import logging
 import os
+import socket
 import sqlite3
 import time
 import uuid
-from typing import Any, Awaitable, Callable
+from typing import Any, Awaitable, Callable, Iterator
 
 logger = logging.getLogger("repro.engine.broker")
 
@@ -40,7 +48,17 @@ CREATE TABLE IF NOT EXISTS tasks (
     created_at REAL NOT NULL
 );
 CREATE INDEX IF NOT EXISTS idx_tasks_queue ON tasks(queue, state);
+CREATE TABLE IF NOT EXISTS events (
+    seq INTEGER PRIMARY KEY AUTOINCREMENT,
+    subject TEXT NOT NULL,
+    sender TEXT,
+    body TEXT NOT NULL,
+    ts REAL NOT NULL
+);
 """
+
+#: keep at most this many events in the durable broadcast log
+EVENT_LOG_CAP = 10000
 
 
 class BrokerServer:
@@ -58,7 +76,9 @@ class BrokerServer:
         self._rpc: dict[str, str] = {}                 # identifier -> client id
         self._last_beat: dict[str, float] = {}
         self._pending_rpc: dict[str, tuple[str, Any]] = {}
+        self._events_uncommitted = 0
         self._conn = None
+        self._reaper_task: asyncio.Task | None = None
 
     # -- storage ------------------------------------------------------------
     def conn(self) -> sqlite3.Connection:
@@ -77,14 +97,30 @@ class BrokerServer:
         self._server = await asyncio.start_server(self._on_client, self.host,
                                                   self.port)
         self.port = self._server.sockets[0].getsockname()[1]
-        asyncio.ensure_future(self._reaper())
+        self._reaper_task = asyncio.ensure_future(self._reaper())
         logger.info("broker listening on %s:%d", self.host, self.port)
         return self.host, self.port
 
     async def stop(self) -> None:
+        if self._reaper_task is not None:
+            self._reaper_task.cancel()
+            self._reaper_task = None
+        # closing the writers EOFs each _on_client loop so the per-client
+        # handler tasks finish instead of lingering past the server
+        for writer in list(self._clients.values()):
+            writer.close()
+        self._clients.clear()
+        self._last_beat.clear()
+        if self._events_uncommitted and self._conn is not None:
+            self._conn.commit()
+            self._events_uncommitted = 0
         if self._server:
             self._server.close()
             await self._server.wait_closed()
+        await asyncio.sleep(0)  # let client tasks observe the EOF
+        if self._conn is not None:
+            self._conn.close()
+            self._conn = None
 
     # -- client handling ---------------------------------------------------------
     async def _on_client(self, reader: asyncio.StreamReader,
@@ -114,6 +150,12 @@ class BrokerServer:
             consumers.discard(cid)
         for ident in [k for k, v in self._rpc.items() if v == cid]:
             del self._rpc[ident]
+        # fail RPCs whose target just died — callers must not hang forever
+        for rid in [r for r, (_, target) in self._pending_rpc.items()
+                    if target == cid]:
+            origin, _ = self._pending_rpc.pop(rid)
+            self._send(origin, {"kind": "rpc_reply", "rid": rid,
+                                "error": "rpc target disconnected"})
         # requeue this consumer's inflight tasks immediately...
         self.conn().execute(
             "UPDATE tasks SET state='ready', consumer=NULL WHERE "
@@ -126,6 +168,9 @@ class BrokerServer:
     def _send(self, cid: str, msg: dict) -> None:
         writer = self._clients.get(cid)
         if writer is None:
+            return
+        if writer.is_closing():
+            self._drop_client(cid)
             return
         try:
             writer.write(json.dumps(msg).encode() + b"\n")
@@ -163,6 +208,17 @@ class BrokerServer:
             self._deliver(msg["queue"])
         elif kind == "rpc_register":
             self._rpc[msg["identifier"]] = cid
+        elif kind == "rpc_unregister":
+            if self._rpc.get(msg["identifier"]) == cid:
+                del self._rpc[msg["identifier"]]
+        elif kind == "rpc_lookup":
+            # the live-identifier directory: how clients discover which
+            # processes/workers are reachable right now
+            pattern = msg.get("pattern", "*")
+            self._send(cid, {"kind": "rpc_reply", "rid": msg["rid"],
+                             "result": sorted(
+                                 i for i in self._rpc
+                                 if fnmatch.fnmatch(i, pattern))})
         elif kind == "rpc_send":
             target = self._rpc.get(msg["identifier"])
             if target is None:
@@ -170,7 +226,7 @@ class BrokerServer:
                                  "error": f"no subscriber "
                                           f"{msg['identifier']!r}"})
             else:
-                self._pending_rpc[msg["rid"]] = (cid, None)
+                self._pending_rpc[msg["rid"]] = (cid, target)
                 self._send(target, {"kind": "rpc_request", "rid": msg["rid"],
                                     "identifier": msg["identifier"],
                                     "msg": msg["msg"]})
@@ -179,11 +235,49 @@ class BrokerServer:
             if origin is not None:
                 self._send(origin[0], msg)
         elif kind == "broadcast":
+            seq = self._log_event(msg)
             for other in list(self._clients):
-                self._send(other, {"kind": "broadcast",
+                self._send(other, {"kind": "broadcast", "seq": seq,
                                    "subject": msg["subject"],
                                    "sender": msg.get("sender"),
                                    "body": msg.get("body", {})})
+        elif kind == "events_since":
+            # durable replay: stream the logged events this client missed
+            pattern = msg.get("pattern")
+            rows = self.conn().execute(
+                "SELECT seq, subject, sender, body FROM events WHERE seq>?"
+                " ORDER BY seq", (msg.get("seq", 0),)).fetchall()
+            last = msg.get("seq", 0)
+            for row in rows:
+                last = row["seq"]
+                if pattern and not fnmatch.fnmatch(row["subject"], pattern):
+                    continue
+                self._send(cid, {"kind": "broadcast", "seq": row["seq"],
+                                 "subject": row["subject"],
+                                 "sender": json.loads(row["sender"] or "null"),
+                                 "body": json.loads(row["body"]),
+                                 "replay": True})
+            self._send(cid, {"kind": "events_caught_up", "seq": last})
+
+    def _log_event(self, msg: dict) -> int:
+        """Append a broadcast to the durable event log; returns its seq.
+        Commits are batched (every 50 events + the reaper tick): replay
+        reads go through the same connection and therefore see uncommitted
+        rows, so fan-out latency never waits on fsync."""
+        conn = self.conn()
+        cur = conn.execute(
+            "INSERT INTO events (subject, sender, body, ts) VALUES (?,?,?,?)",
+            (msg["subject"], json.dumps(msg.get("sender")),
+             json.dumps(msg.get("body", {})), time.time()))
+        seq = cur.lastrowid
+        if seq % 1000 == 0:
+            conn.execute("DELETE FROM events WHERE seq <= ?",
+                         (seq - EVENT_LOG_CAP,))
+        self._events_uncommitted += 1
+        if self._events_uncommitted >= 50:
+            conn.commit()
+            self._events_uncommitted = 0
+        return seq
 
     # -- delivery ---------------------------------------------------------------------
     def _deliver(self, queue: str) -> None:
@@ -224,6 +318,9 @@ class BrokerServer:
         """Requeue tasks of consumers that missed two heartbeats."""
         while True:
             await asyncio.sleep(self.heartbeat)
+            if self._events_uncommitted:
+                self.conn().commit()
+                self._events_uncommitted = 0
             deadline = time.monotonic() - 2 * self.heartbeat
             dead = [cid for cid, beat in self._last_beat.items()
                     if beat < deadline]
@@ -271,13 +368,17 @@ class BrokerClient:
             self._tasks.append(asyncio.ensure_future(self._recv_loop()))
             self._tasks.append(asyncio.ensure_future(self._heartbeat_loop()))
 
-    def _send(self, msg: dict) -> None:
+    def _send(self, msg: dict) -> bool:
+        """Best-effort write; False when the connection is down (the
+        reconnect loop will recover subscriptions, but a caller awaiting
+        a reply must fail fast rather than wait on a message never sent)."""
         if self._writer is None or self._writer.is_closing():
-            return
+            return False
         try:
             self._writer.write(json.dumps(msg).encode() + b"\n")
+            return True
         except Exception:  # noqa: BLE001 — reconnect loop will recover
-            pass
+            return False
 
     async def _heartbeat_loop(self) -> None:
         while True:
@@ -301,10 +402,17 @@ class BrokerClient:
             line = await self._reader.readline()
             if not line:
                 # connection lost (e.g. broker reaped us while busy, or
-                # broker restarted): reconnect and resubscribe
+                # broker restarted): reconnect and resubscribe. In-flight
+                # RPC replies died with the connection — fail their
+                # waiters instead of leaving callers awaiting forever.
                 if self._writer is not None:
                     self._writer.close()
                 self._reader = self._writer = None
+                waiters, self._rpc_waiters = self._rpc_waiters, {}
+                for fut in waiters.values():
+                    if not fut.done():
+                        fut.set_exception(
+                            ConnectionError("broker connection lost"))
                 await self._reconnect()
                 continue
             msg = json.loads(line)
@@ -367,13 +475,27 @@ class BrokerClient:
 
     def remove_rpc_subscriber(self, identifier: str) -> None:
         self._rpc_handlers.pop(identifier, None)
+        self._send({"kind": "rpc_unregister", "identifier": identifier})
+
+    async def rpc_lookup(self, pattern: str = "*") -> list[str]:
+        """Query the broker's live RPC-identifier directory."""
+        rid = str(uuid.uuid4())
+        fut = asyncio.get_running_loop().create_future()
+        self._rpc_waiters[rid] = fut
+        if not self._send({"kind": "rpc_lookup", "rid": rid,
+                           "pattern": pattern}):
+            self._rpc_waiters.pop(rid, None)
+            raise ConnectionError("broker connection lost")
+        return await fut
 
     async def rpc_send_async(self, identifier: str, msg: dict) -> Any:
         rid = str(uuid.uuid4())
         fut = asyncio.get_running_loop().create_future()
         self._rpc_waiters[rid] = fut
-        self._send({"kind": "rpc_send", "rid": rid, "identifier": identifier,
-                    "msg": msg})
+        if not self._send({"kind": "rpc_send", "rid": rid,
+                           "identifier": identifier, "msg": msg}):
+            self._rpc_waiters.pop(rid, None)
+            raise ConnectionError("broker connection lost")
         return await fut
 
     def rpc_send(self, identifier: str, msg: dict) -> Any:
@@ -406,3 +528,162 @@ class BrokerClient:
             t.cancel()
         if self._writer is not None:
             self._writer.close()
+
+
+class SyncBrokerClient:
+    """Blocking broker client for non-async callers (the CLI, tests).
+
+    Speaks the same newline-JSON protocol as :class:`BrokerClient` but over
+    a plain socket, sending heartbeats while idle so the broker's reaper
+    does not presume it dead during a long ``watch``."""
+
+    def __init__(self, host: str, port: int, connect_timeout: float = 10.0):
+        self.host = host
+        self.port = port
+        self.connect_timeout = connect_timeout
+        self._sock: socket.socket | None = None
+        self._buf = b""
+        self._last_beat = 0.0
+        # broadcasts that arrived interleaved with an RPC reply; a later
+        # events() call must still see them
+        self._pending: list[dict] = []
+        self._connect()
+
+    def _connect(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+        self._sock = socket.create_connection(
+            (self.host, self.port), timeout=self.connect_timeout)
+        self._sock.settimeout(0.25)
+        self._buf = b""
+        self._last_beat = 0.0
+
+    def _send(self, msg: dict) -> None:
+        try:
+            self._sock.sendall(json.dumps(msg).encode() + b"\n")
+        except OSError as exc:
+            raise ConnectionError("broker connection lost") from exc
+
+    def _heartbeat(self) -> None:
+        now = time.monotonic()
+        if now - self._last_beat >= 0.5:
+            self._send({"kind": "heartbeat"})
+            self._last_beat = now
+
+    def _recv(self, deadline: float | None) -> dict | None:
+        """Next message, or None once the deadline passes."""
+        while True:
+            # heartbeat even while draining buffered lines (e.g. a long
+            # replay): the broker's reaper must keep seeing us alive
+            self._heartbeat()
+            if b"\n" in self._buf:
+                line, self._buf = self._buf.split(b"\n", 1)
+                if line.strip():
+                    return json.loads(line)
+                continue
+            if deadline is not None and time.monotonic() > deadline:
+                return None
+            try:
+                chunk = self._sock.recv(65536)
+            except TimeoutError:
+                continue
+            except OSError as exc:
+                raise ConnectionError("broker connection lost") from exc
+            if not chunk:
+                raise ConnectionError("broker closed the connection")
+            self._buf += chunk
+
+    def _await_reply(self, rid: str, timeout: float) -> Any:
+        deadline = time.monotonic() + timeout
+        while True:
+            msg = self._recv(deadline)
+            if msg is None:
+                raise TimeoutError(f"no broker reply within {timeout}s")
+            if msg.get("kind") == "rpc_reply" and msg.get("rid") == rid:
+                if "error" in msg:
+                    raise KeyError(msg["error"])
+                return msg.get("result")
+            if msg.get("kind") == "broadcast":
+                # e.g. the state change a control intent provoked landing
+                # before its rpc_reply — keep it for the next events() call
+                self._pending.append(msg)
+
+    def _request(self, build_msg, timeout: float) -> Any:
+        """Send a request and await its reply; if the broker reaped this
+        client while it sat idle between calls (2 missed heartbeats),
+        reconnect once and retry — control intents are idempotent."""
+        for attempt in (0, 1):
+            rid = str(uuid.uuid4())
+            try:
+                self._send(build_msg(rid))
+                return self._await_reply(rid, timeout)
+            except ConnectionError:
+                if attempt:
+                    raise
+                self._connect()
+
+    def rpc(self, identifier: str, msg: dict, timeout: float = 10.0) -> Any:
+        return self._request(
+            lambda rid: {"kind": "rpc_send", "rid": rid,
+                         "identifier": identifier, "msg": msg}, timeout)
+
+    def lookup(self, pattern: str = "*", timeout: float = 10.0) -> list[str]:
+        return self._request(
+            lambda rid: {"kind": "rpc_lookup", "rid": rid,
+                         "pattern": pattern}, timeout)
+
+    def broadcast_send(self, subject: str, sender: Any = None,
+                       body: dict | None = None) -> None:
+        self._send({"kind": "broadcast", "subject": subject,
+                    "sender": sender, "body": body or {}})
+
+    def events(self, subject_filter: str | None = None,
+               timeout: float | None = None,
+               replay_since: int | None = None
+               ) -> Iterator[tuple[str, Any, dict]]:
+        """Yield ``(subject, sender, body)`` broadcasts as they arrive;
+        stops after ``timeout`` seconds of total watching (None = forever).
+        ``replay_since`` first replays logged events with seq > the given
+        value (0 = everything the broker still remembers)."""
+        if replay_since is not None:
+            self._send({"kind": "events_since", "seq": replay_since,
+                        "pattern": subject_filter})
+        deadline = None if timeout is None else time.monotonic() + timeout
+        # replay + live can overlap around the events_since request; the
+        # broker stamps every event with a unique seq — dedup on it, but
+        # only until the replay catches up (keeps `seen` bounded on
+        # long-lived watches)
+        seen: set[int] = set()
+        replaying = replay_since is not None
+        while True:
+            if self._pending:
+                msg = self._pending.pop(0)
+            else:
+                msg = self._recv(deadline)
+            if msg is None:
+                return
+            if msg.get("kind") == "events_caught_up":
+                replaying = False
+                seen.clear()
+                continue
+            if msg.get("kind") != "broadcast":
+                continue
+            seq = msg.get("seq")
+            if replaying and seq is not None:
+                if seq in seen:
+                    continue
+                seen.add(seq)
+            subject = msg["subject"]
+            if subject_filter and not fnmatch.fnmatch(subject,
+                                                      subject_filter):
+                continue
+            yield subject, msg.get("sender"), msg.get("body", {})
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass

@@ -19,6 +19,8 @@ import os
 import time
 from typing import Any
 
+from repro.engine.runner import TERMINAL
+
 logger = logging.getLogger("repro.engine.daemon")
 
 PROCESS_QUEUE = "process.queue"
@@ -28,12 +30,42 @@ PROCESS_QUEUE = "process.queue"
 # Worker main
 # ---------------------------------------------------------------------------
 
+def make_process_task_handler(runner, store, owned: set | None = None):
+    """The worker's task-queue handler: resume one process from its
+    checkpoint and drive it to termination. ``owned`` (when given) tracks
+    the pks this worker currently runs — advertised over the worker's own
+    RPC endpoint. Factored out so tests can exercise the exact
+    resume/kill-durability path without spawning OS processes."""
+    from repro.core.process import Process
+
+    async def handle(payload: dict) -> None:
+        pk = payload["pk"]
+        checkpoint = store.load_checkpoint(pk)
+        if checkpoint is None:
+            node = store.get_node(pk)
+            if node and node.get("process_state") in TERMINAL:
+                return  # duplicate delivery of a finished process
+            raise RuntimeError(f"no checkpoint for process {pk}")
+        process = Process.recreate_from_checkpoint(checkpoint, runner=runner)
+        if owned is not None:
+            owned.add(pk)
+        try:
+            # step_until_terminated registers process.<pk> RPC itself and
+            # honours a durably-recorded kill before doing any work
+            await process.step_until_terminated()
+        finally:
+            if owned is not None:
+                owned.discard(pk)
+
+    return handle
+
+
 def _worker_main(broker_host: str, broker_port: int, store_path: str,
                  slots: int, crash_after: float | None = None) -> None:
     """Entry point of one daemon worker OS process."""
     import random
+    import uuid
 
-    from repro.core.process import Process
     from repro.engine.broker import BrokerClient
     from repro.engine.runner import Runner, set_default_runner
     from repro.provenance.store import configure_store
@@ -48,24 +80,16 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
         runner.distributed = True
         set_default_runner(runner)
 
-        async def handle(payload: dict) -> None:
-            pk = payload["pk"]
-            checkpoint = store.load_checkpoint(pk)
-            if checkpoint is None:
-                node = store.get_node(pk)
-                if node and node.get("process_state") in (
-                        "finished", "excepted", "killed"):
-                    return  # duplicate delivery of a finished process
-                raise RuntimeError(f"no checkpoint for process {pk}")
-            process = Process.recreate_from_checkpoint(checkpoint,
-                                                       runner=runner)
-            runner._register_rpc(process)
-            try:
-                await process.step_until_terminated()
-            finally:
-                runner.communicator.remove_rpc_subscriber(f"process.{pk}")
+        # advertise this worker + the pks it owns (control-plane directory)
+        worker_id = f"worker.{os.getpid()}-{uuid.uuid4().hex[:6]}"
+        owned: set[int] = set()
+        client.add_rpc_subscriber(
+            worker_id,
+            lambda msg: {"worker": worker_id, "pid": os.getpid(),
+                         "slots": slots, "pks": sorted(owned)})
 
-        client.add_task_subscriber(PROCESS_QUEUE, handle)
+        client.add_task_subscriber(
+            PROCESS_QUEUE, make_process_task_handler(runner, store, owned))
         if crash_after is not None:
             # fault-injection for tests: die hard mid-work
             await asyncio.sleep(crash_after + random.random() * 0.1)
@@ -198,3 +222,9 @@ class Daemon:
         with socket.create_connection((self.host, self.port), timeout=10) as s:
             s.sendall(msg.encode())
             time.sleep(0.05)
+
+    def controller(self):
+        """A synchronous control-plane client for this daemon's broker
+        (pause/play/kill/status/watch — the `repro process` verbs)."""
+        from repro.engine.controller import ProcessController
+        return ProcessController(self.host, self.port)

@@ -10,14 +10,18 @@ from __future__ import annotations
 
 import asyncio
 import logging
-from typing import Any
+from typing import Any, Iterable
 
 from repro.core.exit_code import ExitCode
 from repro.core.process import Process
-from repro.engine.communicator import LocalCommunicator
+from repro.engine.communicator import (
+    LocalCommunicator, parse_state_subject, process_rpc_id,
+)
+from repro.core.statemachine import TERMINAL_STATES
 from repro.provenance.store import ProvenanceStore, current_store
 
-TERMINAL = ("finished", "excepted", "killed")
+# derived from the canonical state-machine set — the single source of truth
+TERMINAL = tuple(s.value for s in TERMINAL_STATES)
 
 logger = logging.getLogger("repro.engine")
 
@@ -46,12 +50,15 @@ class QueuedHandle:
 class Runner:
     def __init__(self, *, store: ProvenanceStore | None = None,
                  communicator=None, loop: asyncio.AbstractEventLoop | None = None,
-                 slots: int = 200, poll_interval: float = 2.0):
+                 slots: int = 200, liveness_interval: float = 30.0):
         self.store = store or current_store()
         self.communicator = communicator or LocalCommunicator()
         self._loop = loop
         self.slots = slots
-        self.poll_interval = poll_interval
+        # NOT a poll interval: waits are event-driven; this only bounds how
+        # often a waiter double-checks the store in case the owning worker
+        # crashed without broadcasting a terminal state
+        self.liveness_interval = liveness_interval
         self.logger = logger
         self._processes: dict[int, ProcessHandle] = {}
         self._slot_sem: asyncio.Semaphore | None = None
@@ -75,27 +82,12 @@ class Runner:
         return self._slot_sem
 
     # -- process control RPC (paper §III.C.b) ---------------------------------------
-    def _register_rpc(self, process: Process) -> None:
-        def handler(msg: dict):
-            action = msg.get("action")
-            if action == "pause":
-                process.pause()
-                return True
-            if action == "play":
-                process.play()
-                return True
-            if action == "kill":
-                process.kill(msg.get("message", "killed via RPC"))
-                return True
-            if action == "status":
-                return process.state.value
-            raise ValueError(f"unknown RPC action {action!r}")
-
-        self.communicator.add_rpc_subscriber(f"process.{process.pk}", handler)
-
-    def control(self, pk: int, action: str, **kw) -> Any:
-        return self.communicator.rpc_send(f"process.{pk}",
-                                          {"action": action, **kw})
+    def control(self, pk: int, intent: str, **kw) -> Any:
+        """Send a control intent (pause/play/kill/status) to a live
+        process. With a LocalCommunicator this returns the result; with a
+        BrokerClient it returns an awaitable to ``await``."""
+        return self.communicator.rpc_send(process_rpc_id(pk),
+                                          {"intent": intent, **kw})
 
     # -- submission --------------------------------------------------------------------
     def submit(self, process_class: type, inputs: dict | None = None,
@@ -113,15 +105,16 @@ class Runner:
         return self._schedule(process)
 
     def _schedule(self, process: Process) -> ProcessHandle:
-        self._register_rpc(process)
+        # controllable from the moment of submission — even while queued
+        # behind the slot semaphore (step_until_terminated re-registers
+        # idempotently and unregisters on termination)
+        process._register_control()
 
         async def _drive():
             async with self._sem():
                 try:
                     return await process.step_until_terminated()
                 finally:
-                    self.communicator.remove_rpc_subscriber(
-                        f"process.{process.pk}")
                     self._processes.pop(process.pk, None)
 
         # create_task works on a not-yet-running loop; the task starts when
@@ -158,7 +151,6 @@ class Runner:
             ) -> tuple[dict, Process]:
         """Blockingly run a process to completion on this runner's loop."""
         process = process_class(inputs=inputs, runner=self)
-        self._register_rpc(process)
         if self.loop.is_running():
             raise RuntimeError("Runner.run() cannot be used inside a running "
                                "loop; use submit()")
@@ -168,38 +160,62 @@ class Runner:
     def run_until_complete(self, awaitable):
         return self.loop.run_until_complete(awaitable)
 
-    # -- waiting on processes (local fast-path, remote via broadcast+poll) -----------
+    # -- waiting on processes (local fast-path, remote purely event-driven) ----------
     async def wait_for_process(self, pk: int) -> None:
+        """Block until the process is terminal. Local processes complete
+        via their done-event; remote processes complete when their
+        terminal ``state_changed.<pk>.<state>`` broadcast arrives — there
+        is no poll loop, only a coarse liveness fallback that re-checks
+        the store in case the owning worker crashed without broadcasting."""
         handle = self._processes.get(pk)
         if handle is not None:
             await handle.process.wait_done()
-            return
-
-        node = self.store.get_node(pk)
-        if node and node.get("process_state") in TERMINAL:
             return
 
         ev = asyncio.Event()
         loop = asyncio.get_running_loop()
 
         def on_broadcast(subject: str, sender, body):
-            if sender == pk and subject.split(".")[-1] in TERMINAL:
+            parsed = parse_state_subject(subject)
+            if parsed and parsed[0] == pk and parsed[1] in TERMINAL:
                 loop.call_soon_threadsafe(ev.set)
 
+        # subscribe BEFORE the store check: a terminal broadcast landing
+        # between check and subscribe would otherwise be lost
         token = self.communicator.add_broadcast_subscriber(
-            on_broadcast, subject_filter="state_changed.*")
+            on_broadcast, subject_filter=f"state_changed.{pk}.*")
         try:
-            while not ev.is_set():
-                node = self.store.get_node(pk)
-                if node and node.get("process_state") in TERMINAL:
-                    return
+            node = self.store.get_node(pk)
+            if node and node.get("process_state") in TERMINAL:
+                return
+            while True:
                 try:
                     await asyncio.wait_for(ev.wait(),
-                                           timeout=self.poll_interval)
+                                           timeout=self.liveness_interval)
+                    return
                 except asyncio.TimeoutError:
-                    continue
+                    node = self.store.get_node(pk)
+                    if node and node.get("process_state") in TERMINAL:
+                        return
         finally:
             self.communicator.remove_broadcast_subscriber(token)
+
+    @staticmethod
+    def _target_pk(target) -> int:
+        return target if isinstance(target, int) else target.pk
+
+    async def wait(self, target) -> dict | None:
+        """Wait for a process (handle, queued handle or pk) to reach a
+        terminal state; returns its final node row."""
+        pk = self._target_pk(target)
+        await self.wait_for_process(pk)
+        return self.store.get_node(pk)
+
+    async def wait_all(self, targets: Iterable) -> list[dict | None]:
+        """Wait for many processes concurrently (one broadcast
+        subscription each, no serialization of the waits)."""
+        return list(await asyncio.gather(
+            *[self.wait(t) for t in targets]))
 
     def close(self) -> None:
         self.communicator.close()

@@ -183,15 +183,29 @@ class ProvenanceStore:
         vals.append(pk)
         with self._lock:
             if attributes is not None:
-                # merge, don't replace — e.g. `cached_from` must survive the
-                # state-transition attribute writes
-                row = self._conn().execute(
-                    "SELECT attributes FROM nodes WHERE pk=?",
-                    (pk,)).fetchone()
-                merged = json.loads(row["attributes"] or "{}") if row else {}
-                merged.update(attributes)
-                sets.append("attributes=?")
-                vals.insert(-1, json.dumps(merged))
+                # merge, don't replace — e.g. `cached_from` (and the durable
+                # `kill_requested` control marker) must survive the
+                # state-transition attribute writes. Merge in SQL: a python
+                # read-modify-write would race against writers in OTHER OS
+                # processes (daemon workers vs a control CLI) and lose keys.
+                # NB json_patch treats a null value as key deletion; no
+                # caller stores None attribute values.
+                try:
+                    self._conn().execute(
+                        "UPDATE nodes SET attributes="
+                        "json_patch(COALESCE(attributes,'{}'),?) WHERE pk=?",
+                        (json.dumps(attributes), pk))
+                except sqlite3.OperationalError:
+                    # sqlite built without JSON1: best-effort python merge
+                    row = self._conn().execute(
+                        "SELECT attributes FROM nodes WHERE pk=?",
+                        (pk,)).fetchone()
+                    merged = (json.loads(row["attributes"] or "{}")
+                              if row else {})
+                    merged.update(attributes)
+                    self._conn().execute(
+                        "UPDATE nodes SET attributes=? WHERE pk=?",
+                        (json.dumps(merged), pk))
             self._conn().execute(
                 f"UPDATE nodes SET {', '.join(sets)} WHERE pk=?", vals)
             self._conn().commit()

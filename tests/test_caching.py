@@ -139,6 +139,48 @@ class TestHashing:
         assert compute_input_hash(body_a.process_class, {"x": Int(1)}) != \
             compute_input_hash(body_b.process_class, {"x": Int(1)})
 
+    def test_exclude_from_hash_port_not_fingerprinted(self, store):
+        """Ports declared exclude_from_hash (tolerances/thresholds) do not
+        affect the cache fingerprint, while normal ports do."""
+
+        class Tolerant(Process):
+            NODE_TYPE = NodeType.CALC_FUNCTION
+            executions = 0
+
+            @classmethod
+            def define(cls, spec: ProcessSpec) -> None:
+                super().define(spec)
+                spec.input("x", valid_type=Int)
+                spec.input("tol", valid_type=Float, required=False,
+                           exclude_from_hash=True)
+                spec.output("y", valid_type=Int)
+
+            async def run(self):
+                type(self).executions += 1
+                self.out("y", Int(self.inputs["x"].value * 2))
+
+        h_base = compute_input_hash(Tolerant, {"x": Int(1),
+                                               "tol": Float(1e-6)})
+        h_tol = compute_input_hash(Tolerant, {"x": Int(1),
+                                              "tol": Float(1e-3)})
+        h_x = compute_input_hash(Tolerant, {"x": Int(2),
+                                            "tol": Float(1e-6)})
+        assert h_base == h_tol      # tolerance change: same fingerprint
+        assert h_base != h_x        # real input change: different
+
+        # end to end: a different tolerance still takes the cache hit,
+        # and the tolerance IS linked in provenance (unlike non_db)
+        from repro.engine.runner import default_runner
+        runner = default_runner()
+        with enable_caching():
+            _, p1 = runner.run(Tolerant, {"x": Int(5), "tol": Float(1e-6)})
+            _, p2 = runner.run(Tolerant, {"x": Int(5), "tol": Float(1e-3)})
+        assert Tolerant.executions == 1
+        attrs = json.loads(store.get_node(p2.pk)["attributes"])
+        assert attrs["cached_from_pk"] == p1.pk
+        labels = {lbl for _, _, lbl in store.incoming(p2.pk)}
+        assert "tol" in labels
+
     def test_nested_metadata_key_is_hashed(self, store):
         class DynIn(Doubler):
             @classmethod

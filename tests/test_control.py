@@ -1,0 +1,468 @@
+"""The event-driven control plane (paper §III.A, §III.C): remote RPC
+process control forwarded through the broker, event-driven waits (no poll
+loop), durable kills that survive worker restarts, and the live
+state-change event stream."""
+
+import asyncio
+import json
+import time
+
+import pytest
+
+from repro.core.process import Process
+from repro.engine.broker import BrokerClient, BrokerServer, SyncBrokerClient
+from repro.engine.communicator import (
+    parse_state_subject, process_rpc_id, state_subject,
+)
+from repro.engine.daemon import make_process_task_handler
+from repro.engine.runner import Runner
+from repro.provenance.store import NodeType, configure_store
+
+TERMINAL = ("finished", "excepted", "killed")
+
+
+class Spin(Process):
+    """Runs 'forever' in small interruptible slices — a control target."""
+
+    async def run(self):
+        for _ in range(5000):
+            await self._pause_point()
+            await self.interruptible(asyncio.sleep(0.01))
+
+
+class Quick(Process):
+    async def run(self):
+        await asyncio.sleep(0.05)
+
+
+def run(coro, timeout=60):
+    loop = asyncio.new_event_loop()
+    try:
+        return loop.run_until_complete(asyncio.wait_for(coro, timeout))
+    finally:
+        loop.close()
+
+
+async def _broker_pair(tmp_path):
+    """A broker + two connected clients (one 'worker', one 'control')."""
+    server = BrokerServer(str(tmp_path / "broker.db"))
+    host, port = await server.start()
+    worker = BrokerClient(host, port)
+    await worker.connect()
+    control = BrokerClient(host, port)
+    await control.connect()
+    return server, worker, control
+
+
+async def _status_until(control, pk, want, attempts=200):
+    for _ in range(attempts):
+        status = await control.rpc_send_async(process_rpc_id(pk),
+                                              {"intent": "status"})
+        if status["state"] == want:
+            return status
+        await asyncio.sleep(0.02)
+    raise AssertionError(f"process {pk} never reached {want!r}: {status}")
+
+
+# ---------------------------------------------------------------------------
+# subject / identifier scheme
+# ---------------------------------------------------------------------------
+
+def test_subject_scheme_roundtrip():
+    assert state_subject(42, "finished") == "state_changed.42.finished"
+    assert parse_state_subject("state_changed.42.finished") == (42, "finished")
+    assert parse_state_subject("unrelated.42.finished") is None
+    assert parse_state_subject("state_changed.nan.x") is None
+    assert process_rpc_id(7) == "process.7"
+
+
+# ---------------------------------------------------------------------------
+# remote control through the broker (cross-client RPC forwarding)
+# ---------------------------------------------------------------------------
+
+def test_remote_pause_play_kill_through_broker(tmp_path):
+    async def main():
+        _, worker, control = await _broker_pair(tmp_path)
+        store = configure_store(":memory:")
+        runner_w = Runner(store=store, communicator=worker)
+        handle = runner_w.submit(Spin, {})
+        pk = handle.pk
+        await asyncio.sleep(0.1)   # let the process start + register RPC
+
+        assert await control.rpc_send_async(
+            process_rpc_id(pk), {"intent": "pause"}) is True
+        status = await _status_until(control, pk, "paused")
+        assert status["paused"] is True
+        assert store.get_node(pk)["process_state"] == "paused"
+
+        assert await control.rpc_send_async(
+            process_rpc_id(pk), {"intent": "play"}) is True
+        await _status_until(control, pk, "running")
+
+        assert await control.rpc_send_async(
+            process_rpc_id(pk), {"intent": "kill", "message": "bye"}) is True
+        await asyncio.wait_for(handle.process.wait_done(), 10)
+        assert handle.process.state.value == "killed"
+        node = store.get_node(pk)
+        assert node["process_state"] == "killed"
+        # the kill was recorded durably before it was executed
+        assert json.loads(node["attributes"])["kill_requested"] == "bye"
+
+    run(main())
+
+
+def test_rpc_to_unknown_process_errors(tmp_path):
+    async def main():
+        _, _, control = await _broker_pair(tmp_path)
+        with pytest.raises(KeyError):
+            await control.rpc_send_async(process_rpc_id(404),
+                                         {"intent": "status"})
+
+    run(main())
+
+
+def test_rpc_directory_lookup_and_sync_client(tmp_path):
+    async def main():
+        server, worker, control = await _broker_pair(tmp_path)
+        worker.add_rpc_subscriber("worker.abc",
+                                  lambda msg: {"pks": [1, 2], "slots": 4})
+        worker.add_rpc_subscriber(process_rpc_id(7),
+                                  lambda msg: {"state": "running"})
+        await asyncio.sleep(0.05)
+        assert await control.rpc_lookup("process.*") == ["process.7"]
+        assert await control.rpc_lookup("worker.*") == ["worker.abc"]
+
+        def sync_part():
+            client = SyncBrokerClient(server.host, server.port)
+            try:
+                assert client.lookup("worker.*") == ["worker.abc"]
+                assert client.rpc("worker.abc", {})["pks"] == [1, 2]
+                with pytest.raises(KeyError):
+                    client.rpc("process.404", {})
+            finally:
+                client.close()
+
+        await asyncio.get_running_loop().run_in_executor(None, sync_part)
+
+        # unregistering removes the directory entry
+        worker.remove_rpc_subscriber(process_rpc_id(7))
+        await asyncio.sleep(0.05)
+        assert await control.rpc_lookup("process.*") == []
+
+    run(main())
+
+
+# ---------------------------------------------------------------------------
+# event-driven waits (the no-poll-loop claim)
+# ---------------------------------------------------------------------------
+
+def test_runner_has_no_poll_interval():
+    assert not hasattr(Runner(store=configure_store(":memory:")),
+                       "poll_interval")
+
+
+def test_remote_wait_is_event_driven(tmp_path):
+    """A waiter with no local handle completes via the terminal broadcast
+    well under the old 2 s poll floor."""
+
+    async def main():
+        _, worker, waiter = await _broker_pair(tmp_path)
+        store = configure_store(":memory:")
+        runner_w = Runner(store=store, communicator=worker)
+        runner_c = Runner(store=store, communicator=waiter)
+        handle = runner_w.submit(Quick, {})
+        assert handle.pk not in runner_c._processes   # remote path
+
+        t0 = time.monotonic()
+        node = await runner_c.wait(handle.pk)
+        elapsed = time.monotonic() - t0
+        assert node["process_state"] == "finished"
+        # the process itself sleeps 0.05 s; anything close to the old
+        # 2 s poll interval means we are polling again
+        assert elapsed < 1.0, f"wait took {elapsed:.3f}s — not event-driven"
+
+    run(main())
+
+
+def test_wait_all_waits_concurrently(tmp_path):
+    async def main():
+        _, worker, waiter = await _broker_pair(tmp_path)
+        store = configure_store(":memory:")
+        runner_w = Runner(store=store, communicator=worker)
+        runner_c = Runner(store=store, communicator=waiter)
+        handles = [runner_w.submit(Quick, {}) for _ in range(5)]
+        t0 = time.monotonic()
+        nodes = await runner_c.wait_all([h.pk for h in handles])
+        elapsed = time.monotonic() - t0
+        assert [n["process_state"] for n in nodes] == ["finished"] * 5
+        # five concurrent 0.05 s processes must not take 5 × the serial time
+        assert elapsed < 1.0
+
+    run(main())
+
+
+def test_wait_liveness_fallback_catches_silent_termination():
+    """A worker that dies without broadcasting: the coarse store re-check
+    (NOT a poll loop — interval is long in production) still unblocks."""
+
+    async def main():
+        store = configure_store(":memory:")
+        runner = Runner(store=store, liveness_interval=0.1)
+        pk = store.create_process_node(NodeType.PROCESS, "Ghost")
+
+        async def terminate_silently():
+            await asyncio.sleep(0.25)
+            store.update_process(pk, state="finished")
+
+        asyncio.ensure_future(terminate_silently())
+        await asyncio.wait_for(runner.wait_for_process(pk), 5)
+
+    run(main())
+
+
+def test_wait_on_already_terminal_process_returns_immediately():
+    async def main():
+        store = configure_store(":memory:")
+        runner = Runner(store=store)
+        pk = store.create_process_node(NodeType.PROCESS, "Done")
+        store.update_process(pk, state="finished")
+        t0 = time.monotonic()
+        await runner.wait_for_process(pk)
+        assert time.monotonic() - t0 < 0.5
+
+    run(main())
+
+
+# ---------------------------------------------------------------------------
+# durable kill: survives worker restarts, no resurrection
+# ---------------------------------------------------------------------------
+
+def test_kill_is_durable_across_worker_restart(tmp_path):
+    db = str(tmp_path / "store.db")
+
+    async def main():
+        store = configure_store(db)
+        runner1 = Runner(store=store)
+        process = Spin(inputs={}, runner=runner1)
+        pk = process.pk
+        assert store.load_checkpoint(pk) is not None
+
+        # the control plane records the kill while no worker runs the pk
+        # (worker died mid-flight); only the durable marker remains
+        process._control_handler({"intent": "kill", "message": "op kill"})
+
+        # a restarted worker picks the task back up from the queue …
+        runner2 = Runner(store=store)
+        handler = make_process_task_handler(runner2, store)
+        await handler({"pk": pk})
+
+        # … and honours the kill instead of resurrecting the process
+        node = store.get_node(pk)
+        assert node["process_state"] == "killed"
+        assert node["exit_status"] == 998
+        assert store.load_checkpoint(pk) is None
+
+        # duplicate redelivery after termination: a no-op, not an error
+        await handler({"pk": pk})
+        assert store.get_node(pk)["process_state"] == "killed"
+
+    run(main())
+
+
+def test_worker_handler_tracks_owned_pks(tmp_path):
+    async def main():
+        store = configure_store(":memory:")
+        runner = Runner(store=store)
+        process = Quick(inputs={}, runner=runner)
+        owned: set = set()
+        handler = make_process_task_handler(runner, store, owned)
+        task = asyncio.ensure_future(handler({"pk": process.pk}))
+        await asyncio.sleep(0.02)
+        assert owned == {process.pk}
+        await task
+        assert owned == set()
+
+    run(main())
+
+
+def test_slot_queued_process_is_controllable():
+    """A submitted process waiting for a slot already has its control
+    endpoint: kill reaches it before it ever starts stepping."""
+
+    async def main():
+        store = configure_store(":memory:")
+        runner = Runner(store=store, slots=1)
+        blocker = runner.submit(Spin, {})
+        queued = runner.submit(Spin, {})
+        await asyncio.sleep(0.05)
+        # both controllable; the queued one holds no slot yet
+        runner.control(queued.pk, "kill", message="never ran")
+        runner.control(blocker.pk, "kill", message="done blocking")
+        await asyncio.wait_for(queued.process.wait_done(), 10)
+        await asyncio.wait_for(blocker.process.wait_done(), 10)
+        assert store.get_node(queued.pk)["process_state"] == "killed"
+
+    run(main())
+
+
+def test_cli_kill_falls_back_to_durable_marker(tmp_path, capsys):
+    """`repro process kill` on a pk with no live endpoint (queued, or its
+    worker died) records the kill durably; the next pickup honours it."""
+    from repro import cli
+
+    db = str(tmp_path / "store.db")
+
+    async def main():
+        server = BrokerServer(str(tmp_path / "broker.db"))
+        host, port = await server.start()
+        with open(tmp_path / "broker.json", "w") as fh:
+            json.dump({"host": host, "port": port}, fh)
+        store = configure_store(db)
+        process = Spin(inputs={}, runner=Runner(store=store))
+        pk = process.pk
+        store.close()
+
+        def cli_kill():
+            cli.main(["-p", db, "process", "kill", str(pk),
+                      "-w", str(tmp_path), "--message", "late kill"])
+
+        await asyncio.get_running_loop().run_in_executor(None, cli_kill)
+        return pk
+
+    pk = run(main())
+    assert "kill recorded durably" in capsys.readouterr().out
+
+    async def resume():
+        store = configure_store(db)
+        runner = Runner(store=store)
+        await make_process_task_handler(runner, store)({"pk": pk})
+        return store.get_node(pk)
+
+    node = run(resume())
+    assert node["process_state"] == "killed"
+    assert json.loads(node["attributes"])["kill_requested"] == "late kill"
+
+
+# ---------------------------------------------------------------------------
+# durable broadcast log + replay
+# ---------------------------------------------------------------------------
+
+def test_event_log_replays_missed_broadcasts(tmp_path):
+    async def main():
+        server, worker, _ = await _broker_pair(tmp_path)
+        for state in ("running", "finished"):
+            worker.broadcast_send(state_subject(9, state), sender=9,
+                                  body={"pk": 9, "state": state})
+        await asyncio.sleep(0.1)    # let the broker log them
+
+        def sync_part():
+            # a watcher connecting AFTER the fact still sees the events
+            client = SyncBrokerClient(server.host, server.port)
+            try:
+                events = list(client.events(
+                    subject_filter="state_changed.9.*", timeout=1.0,
+                    replay_since=0))
+            finally:
+                client.close()
+            return events
+
+        events = await asyncio.get_running_loop().run_in_executor(
+            None, sync_part)
+        states = [body["state"] for _, _, body in events]
+        assert states == ["running", "finished"]
+
+    run(main())
+
+
+# ---------------------------------------------------------------------------
+# the full stack: daemon worker + broker + CLI kill (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cli_kill_terminates_daemon_process(tmp_path):
+    from repro import cli
+    from repro.calcjobs import TPUTrainJob
+    from repro.core import Dict as DictData
+    from repro.engine.controller import ProcessController
+    from repro.engine.daemon import Daemon
+
+    daemon = Daemon(str(tmp_path), workers=1, slots=4)
+    daemon.start()
+    try:
+        # a job long enough that it is still running when the kill lands
+        pk = daemon.submit(TPUTrainJob, {"config": DictData(
+            {"arch": "qwen2-0.5b", "steps": 5000, "batch": 1, "seq": 8})})
+        store = configure_store(daemon.store_path)
+
+        t0 = time.time()
+        while time.time() - t0 < 120:
+            node = store.get_node(pk) or {}
+            if node.get("process_state") in ("running", "waiting"):
+                break
+            daemon.supervise()
+            time.sleep(0.3)
+        else:
+            pytest.fail(f"process never started: {node}")
+
+        cli.main(["-p", daemon.store_path, "process", "kill", str(pk),
+                  "-w", str(tmp_path), "--message", "cli kill"])
+
+        t0 = time.time()
+        while time.time() - t0 < 60:
+            node = store.get_node(pk)
+            if node["process_state"] in TERMINAL:
+                break
+            time.sleep(0.2)
+        assert node["process_state"] == "killed", node
+        assert node["exit_status"] == 998
+        assert json.loads(node["attributes"])["kill_requested"] == "cli kill"
+
+        # the durable event log lets a late watcher see the whole story
+        with ProcessController.from_workdir(str(tmp_path)) as ctl:
+            events = list(ctl.watch(pk=pk, timeout=2.0, replay_since=0))
+        assert any(body.get("state") == "killed"
+                   for _, _, body in events), events
+    finally:
+        daemon.stop()
+
+
+@pytest.mark.slow
+def test_daemon_wait_latency_under_poll_floor(tmp_path):
+    """Runner.wait on a daemon-run process completes via broadcast well
+    under the old 2 s poll interval after the terminal transition."""
+    from repro.calcjobs import TPUTrainJob
+    from repro.core import Dict as DictData
+    from repro.engine.daemon import Daemon
+
+    daemon = Daemon(str(tmp_path), workers=1, slots=4)
+    daemon.start()
+    try:
+        pk = daemon.submit(TPUTrainJob, {"config": DictData(
+            {"arch": "qwen2-0.5b", "steps": 1, "batch": 1, "seq": 8})})
+        store = configure_store(daemon.store_path)
+
+        async def main():
+            client = BrokerClient(daemon.host, daemon.port)
+            await client.connect()
+            terminal_seen_at = {}
+
+            def stamp(subject, sender, body):
+                parsed = parse_state_subject(subject)
+                if parsed and parsed[1] in TERMINAL:
+                    terminal_seen_at[parsed[0]] = time.monotonic()
+
+            client.add_broadcast_subscriber(stamp, f"state_changed.{pk}.*")
+            runner = Runner(store=store, communicator=client)
+            node = await asyncio.wait_for(runner.wait(pk), 300)
+            waited_until = time.monotonic()
+            client.close()
+            return node, terminal_seen_at.get(pk), waited_until
+
+        node, seen_at, waited_until = run(main(), timeout=320)
+        assert node["process_state"] == "finished"
+        assert seen_at is not None, "terminal broadcast never arrived"
+        # the wait unblocked promptly after the broadcast — not after a
+        # poll interval tick
+        assert waited_until - seen_at < 1.0
+    finally:
+        daemon.stop()

@@ -168,6 +168,72 @@ def test_task_queue_requeues_failed_tasks():
     assert seen == [7, 7]     # redelivered after the nack
 
 
+def test_requeue_timeout_redelivers_hung_task():
+    """Visibility-timeout enforcement: a handler that never acks gets its
+    task redelivered after requeue_timeout (at-least-once semantics)."""
+
+    async def main():
+        comm = LocalCommunicator(requeue_timeout=0.2)
+        seen = []
+        hung = asyncio.Event()
+
+        async def handler(payload):
+            seen.append(payload["n"])
+            if len(seen) == 1:
+                await hung.wait()      # first delivery hangs forever
+
+        comm.add_task_subscriber("q", handler)
+        comm.task_send("q", {"n": 3})
+        for _ in range(200):
+            await asyncio.sleep(0.02)
+            if len(seen) >= 2:
+                break
+        hung.set()
+        comm.close()
+        return seen
+
+    seen = run(main())
+    assert seen == [3, 3]      # redelivered after the visibility timeout
+
+
+def test_no_subscriber_task_is_parked_not_spun():
+    """A task sent before any subscriber exists waits in the queue (no
+    busy-requeue) and is delivered once someone subscribes."""
+
+    async def main():
+        comm = LocalCommunicator()
+        comm.task_send("q", {"n": 1})
+        await asyncio.sleep(0.1)
+        assert comm.queue_depth("q") == 1     # still parked, not churned
+        seen = []
+
+        async def handler(payload):
+            seen.append(payload["n"])
+
+        comm.add_task_subscriber("q", handler)
+        for _ in range(100):
+            await asyncio.sleep(0.01)
+            if seen:
+                break
+        comm.close()
+        return seen
+
+    assert run(main()) == [1]
+
+
+def test_rpc_identifier_directory():
+    async def main():
+        comm = LocalCommunicator()
+        comm.add_rpc_subscriber("process.1", lambda m: None)
+        comm.add_rpc_subscriber("process.2", lambda m: None)
+        comm.add_rpc_subscriber("worker.a", lambda m: None)
+        idents = comm.rpc_identifiers("process.*")
+        comm.close()
+        return idents
+
+    assert run(main()) == ["process.1", "process.2"]
+
+
 def test_broadcast_subject_filter():
     async def main():
         comm = LocalCommunicator()
