@@ -34,9 +34,17 @@ TERMINAL = ("finished", "excepted", "killed")
 
 
 def submit_batch(daemon, n_jobs):
-    return [daemon.submit(TPUTrainJob, {"config": Dict({
-        "arch": "qwen2-0.5b", "steps": 3, "batch": 2, "seq": 32,
-        "seed": i, "lr": 1e-3})}) for i in range(n_jobs)]
+    pks = []
+    for i in range(n_jobs):
+        # one builder per job: the discoverable launch surface — inputs
+        # validate at assignment, before anything touches the queue
+        builder = TPUTrainJob.get_builder()
+        builder.config = Dict({
+            "arch": "qwen2-0.5b", "steps": 3, "batch": 2, "seq": 32,
+            "seed": i, "lr": 1e-3})
+        builder.metadata.label = f"ht-job-{i}"
+        pks.append(daemon.submit(builder))
+    return pks
 
 
 def main():

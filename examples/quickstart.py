@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Covers: calcfunction/workfunction provenance (figs. 1-2), the WorkChain
-outline DSL (fizzbuzz, listing 9), ToContext subprocesses, exit codes, and
-querying the resulting provenance graph.
+outline DSL (fizzbuzz, listing 9), ToContext subprocesses, exit codes,
+the ProcessBuilder + engine.launch API (run/run_get_node on a builder,
+port serializers wrapping raw python), and querying the resulting
+provenance graph.
 """
 
 import sys
@@ -14,6 +16,7 @@ sys.path.insert(0, "src")
 from repro.core import (
     Int, Str, ToContext, WorkChain, calcfunction, if_, while_, workfunction,
 )
+from repro.engine.launch import run, run_get_node
 from repro.engine.runner import Runner, set_default_runner
 from repro.provenance import NodeType, QueryBuilder, configure_store
 
@@ -44,7 +47,7 @@ class FizzBuzzWorkChain(WorkChain):
     @classmethod
     def define(cls, spec):
         super().define(spec)
-        spec.input("n_max", valid_type=Int, default=Int(15))
+        spec.input("n_max", valid_type=Int, serializer=Int, default=Int(15))
         spec.output("summary", valid_type=Str)
         spec.outline(
             cls.initialize_to_zero,
@@ -140,12 +143,17 @@ def main():
     result = add_multiply(Int(1), Int(2), Int(3))
     print(f"add_multiply(1, 2, 3) = {result.value}")
 
-    print("\n== fizzbuzz work chain ==")
-    outputs, proc = runner.run(FizzBuzzWorkChain, {"n_max": Int(15)})
+    print("\n== fizzbuzz work chain (builder + launch API) ==")
+    # the builder mirrors the port tree; a raw 15 is serialized to Int(15)
+    # on assignment, so provenance still records a proper data node
+    builder = FizzBuzzWorkChain.get_builder()
+    builder.n_max = 15
+    builder.metadata.label = "quickstart-fizzbuzz"
+    outputs = run(builder)
     print(outputs["summary"].value)
 
     print("\n== parent/child with ToContext ==")
-    outputs, proc = runner.run(ParentWorkChain, {"a": Int(12)})
+    outputs, proc = run_get_node(ParentWorkChain, a=Int(12))
     print(f"12^2 = {outputs['result'].value}")
 
     print("\n== provenance graph ==")

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import Dict, Float, Int, WorkChain, while_
+from repro.engine.launch import run_get_node
 from repro.engine.runner import Runner, set_default_runner
 from repro.models.registry import build
 from repro.provenance import configure_store
@@ -49,12 +50,16 @@ class PretrainWorkChain(WorkChain):
     @classmethod
     def define(cls, spec):
         super().define(spec)
-        spec.input("preset", valid_type=Dict)
-        spec.input("total_steps", valid_type=Int, default=Int(60))
-        spec.input("chunk_steps", valid_type=Int, default=Int(20))
-        spec.input("lr", valid_type=Float, default=Float(3e-3))
-        spec.input("ckpt_dir", valid_type=Dict, default=Dict({"dir": ""}),
-                   required=False)
+        spec.input("preset", valid_type=Dict, serializer=Dict,
+                   help="model-config overrides applied to the base config")
+        spec.input("total_steps", valid_type=Int, serializer=Int,
+                   default=lambda: Int(60))
+        spec.input("chunk_steps", valid_type=Int, serializer=Int,
+                   default=lambda: Int(20))
+        spec.input("lr", valid_type=Float, serializer=Float,
+                   default=lambda: Float(3e-3))
+        spec.input("ckpt_dir", valid_type=Dict, serializer=Dict,
+                   default=lambda: Dict({"dir": ""}), required=False)
         spec.output("final_metrics", valid_type=Dict)
         spec.exit_code(310, "ERROR_NAN_LOSS", "loss diverged to NaN")
         spec.exit_code(320, "ERROR_NO_PROGRESS",
@@ -181,12 +186,16 @@ def main():
         runner.loop.run_until_complete(handle.process.wait_done())
         proc = handle.process
     else:
-        outputs, proc = runner.run(PretrainWorkChain, {
-            "preset": Dict(PRESETS[args.preset]),
-            "total_steps": Int(args.steps),
-            "chunk_steps": Int(args.chunk),
-            "lr": Float(args.lr),
-        })
+        # builder + launch API: raw python scalars/dicts are wrapped by
+        # the port serializers, so provenance stays complete without
+        # Int(...)/Dict(...) boilerplate at every call site
+        builder = PretrainWorkChain.get_builder()
+        builder.preset = PRESETS[args.preset]
+        builder.total_steps = args.steps
+        builder.chunk_steps = args.chunk
+        builder.lr = args.lr
+        builder.metadata.label = f"train-lm-{args.preset}"
+        outputs, proc = run_get_node(builder)
 
     print(f"\nstate={proc.state.value} exit={proc.exit_code}")
     for log in store.get_logs(proc.pk):

@@ -9,6 +9,8 @@ as sources; invalidation simply clears ``node_hash`` on the source nodes
 
 from __future__ import annotations
 
+import hashlib
+import json
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -32,10 +34,21 @@ class CacheRegistry:
     def __init__(self, store: ProvenanceStore):
         self.store = store
 
+    #: key prefix for the per-process-type hash-collision counters
+    COLLISION_KEY = "cache_collisions"
+    #: how many equivalent sources to cross-check per cache hit (bounds
+    #: the extra payload loads on the hot path)
+    _COLLISION_PROBE = 2
+
     def find_cached(self, process_type: str, input_hash: str,
                     exclude_pk: int | None = None) -> CacheHit | None:
         """Most recent finished-ok node with this fingerprint, plus its
-        output edges — or None."""
+        output edges — or None. When several finished-ok sources share the
+        fingerprint, their outputs are cross-checked by content: a
+        same-hash/different-outputs pair is a *hash collision* (the
+        fingerprint failed to capture something that changed the result)
+        and increments the durable ``cache_collisions.<type>`` counter
+        surfaced by ``repro cache stats``."""
         if not input_hash:
             return None
         rows = (QueryBuilder(self.store)
@@ -44,20 +57,78 @@ class CacheRegistry:
                 .with_state("finished")
                 .with_exit_status(0)
                 .order_by("pk", desc=True)
-                .limit(2)   # newest match + one spare in case it's self
+                .limit(2 + self._COLLISION_PROBE)
                 .all())
-        for row in rows:
-            if exclude_pk is not None and row["pk"] == exclude_pk:
-                continue
-            outputs = [(label, lt, pk)
-                       for pk, lt, label in self.store.outgoing(row["pk"])
+        viable = [row for row in rows
+                  if exclude_pk is None or row["pk"] != exclude_pk]
+        if not viable:
+            return None
+        row = viable[0]
+        outputs = [(label, lt, pk)
+                   for pk, lt, label in self.store.outgoing(row["pk"])
+                   if lt in _OUTPUT_LINKS]
+        if len(viable) > 1:
+            self._record_collisions(process_type, row["pk"], outputs,
+                                    viable[1:])
+        return CacheHit(pk=row["pk"], uuid=row["uuid"],
+                        process_type=process_type,
+                        exit_status=row["exit_status"],
+                        exit_message=row["exit_message"],
+                        outputs=outputs)
+
+    # -- hash-collision telemetry -------------------------------------------
+    def _output_digest(self, outputs: list[tuple[str, str, int]]) -> str:
+        """Content digest of a node's output set: sorted (label, link
+        type, payload hash) triples — node identity does not matter."""
+        from repro.caching.hashing import hash_data_value
+
+        triples = sorted(
+            (label, lt, hash_data_value(self.store.load_data(pk)))
+            for label, lt, pk in outputs)
+        return hashlib.sha256(
+            json.dumps(triples, sort_keys=True).encode()).hexdigest()
+
+    def _output_digest_for(self, pk: int,
+                           outputs: list[tuple[str, str, int]] | None = None
+                           ) -> str:
+        """The node's output digest, memoized in its attributes — the
+        probe on the cache-hit hot path must not re-load full payloads
+        (arrays, folders) on every lookup. Clones inherit the digest from
+        their source via the attribute carry-over, which is sound because
+        their outputs are content-identical by construction."""
+        attrs = json.loads(
+            (self.store.get_node(pk) or {}).get("attributes") or "{}")
+        cached = attrs.get("output_digest")
+        if cached:
+            return cached
+        if outputs is None:
+            outputs = [(label, lt, out_pk)
+                       for out_pk, lt, label in self.store.outgoing(pk)
                        if lt in _OUTPUT_LINKS]
-            return CacheHit(pk=row["pk"], uuid=row["uuid"],
-                            process_type=process_type,
-                            exit_status=row["exit_status"],
-                            exit_message=row["exit_message"],
-                            outputs=outputs)
-        return None
+        digest = self._output_digest(outputs)
+        self.store.update_process(pk, attributes={"output_digest": digest})
+        return digest
+
+    def _record_collisions(self, process_type: str, hit_pk: int,
+                           hit_outputs: list[tuple[str, str, int]],
+                           others: list[dict]) -> None:
+        """Count same-``node_hash``/different-outputs occurrences on the
+        cache-hit path (bounded probe; telemetry must never break a run)."""
+        try:
+            reference = self._output_digest_for(hit_pk, hit_outputs)
+            for row in others[:self._COLLISION_PROBE]:
+                if self._output_digest_for(row["pk"]) != reference:
+                    self.store.incr_meta(
+                        f"{self.COLLISION_KEY}.{process_type}")
+                    break   # one occurrence per lookup, not per pair
+        except Exception:  # noqa: BLE001 — telemetry only
+            pass
+
+    def collision_counts(self) -> dict[str, int]:
+        """Per-process-type hash-collision occurrence counters."""
+        prefix = f"{self.COLLISION_KEY}."
+        return {key[len(prefix):]: int(value) for key, value
+                in self.store.all_meta(prefix).items()}
 
     # -- observability ------------------------------------------------------
     def stats(self) -> dict[str, Any]:
@@ -72,15 +143,18 @@ class CacheRegistry:
             " FROM nodes WHERE node_hash IS NOT NULL"
             " AND node_type LIKE 'process%'"
             " GROUP BY process_type ORDER BY process_type").fetchall()
+        collisions = self.collision_counts()
         per_type = {r["process_type"]: {
             "hashed_nodes": r["n"],
             "distinct_hashes": r["distinct_hashes"],
             "cache_hits": r["hits"] or 0,
+            "hash_collisions": collisions.get(r["process_type"], 0),
         } for r in rows}
         return {
             "process_types": per_type,
             "hashed_nodes": sum(v["hashed_nodes"] for v in per_type.values()),
             "cache_hits": sum(v["cache_hits"] for v in per_type.values()),
+            "hash_collisions": sum(collisions.values()),
         }
 
     def equivalents(self, pk: int) -> list[int]:

@@ -153,6 +153,86 @@ def cmd_graph_export(store: ProvenanceStore, args) -> None:
         print(out)
 
 
+def _resolve_process_class(path: str) -> type:
+    """Import a process class from 'pkg.module:Class', 'pkg.module.Class'
+    or a bare name exported by repro.core / repro.calcjobs."""
+    import importlib
+
+    from repro.core.process import Process
+
+    candidates = []
+    if ":" in path:
+        candidates.append(tuple(path.split(":", 1)))
+    elif "." in path:
+        mod, _, qual = path.rpartition(".")
+        candidates.append((mod, qual))
+    else:
+        candidates.extend((("repro.core", path), ("repro.calcjobs", path)))
+    errors = []
+    for mod_name, qual in candidates:
+        try:
+            obj = importlib.import_module(mod_name)
+            for part in qual.split("."):
+                obj = getattr(obj, part)
+        except (ImportError, AttributeError) as exc:
+            errors.append(str(exc))
+            continue
+        if isinstance(obj, type) and issubclass(obj, Process):
+            return obj
+        # process functions carry their Process class on the wrapper
+        proc_cls = getattr(obj, "process_class", None)
+        if isinstance(proc_cls, type) and issubclass(proc_cls, Process):
+            return proc_cls
+        errors.append(f"{path} is not a Process subclass")
+    sys.exit(f"cannot resolve process class {path!r}: " + "; ".join(errors))
+
+
+def _print_port_tree(ns, indent: int = 2) -> None:
+    from repro.core.ports import PortNamespace
+
+    pad = " " * indent
+    for name, port in sorted(ns.items()):
+        if isinstance(port, PortNamespace):
+            flags = [f for f, on in (("dynamic", port.dynamic),
+                                     ("non_db", port.non_db)) if on]
+            suffix = f" ({', '.join(flags)})" if flags else ""
+            print(f"{pad}{name}/ namespace{suffix}")
+            _print_port_tree(port, indent + 2)
+            continue
+        types = ("|".join(t.__name__ for t in port.valid_type)
+                 if port.valid_type else "any")
+        bits = ["required" if port.required else "optional"]
+        if port.has_default:
+            try:
+                bits.append(f"default={port.default!r}")
+            except Exception:  # noqa: BLE001 — a broken default is still info
+                bits.append("default=<callable>")
+        if port.serializer is not None:
+            bits.append(
+                f"serializer={getattr(port.serializer, '__name__', '?')}")
+        if port.non_db:
+            bits.append("non_db")
+        help_text = f"  — {port.help}" if port.help else ""
+        print(f"{pad}{name:24} {types:16} {', '.join(bits)}{help_text}")
+
+
+def cmd_process_inputs(store: ProvenanceStore, args) -> None:
+    """Dump a process class's declared input/output spec (the discoverable
+    launch surface behind Process.get_builder())."""
+    cls = _resolve_process_class(args.process_class)
+    spec = cls.spec()
+    print(f"{cls.__name__} ({cls.__module__}:{cls.__qualname__})")
+    print("inputs:")
+    _print_port_tree(spec.inputs)
+    print("outputs:")
+    _print_port_tree(spec.outputs)
+    if len(spec.exit_codes):
+        print("exit codes:")
+        for label, ec in sorted(spec.exit_codes.items(),
+                                key=lambda kv: kv[1].status):
+            print(f"  {ec.status:>5}  {label}: {ec.message}")
+
+
 def _controller(args):
     from repro.engine.controller import NoRunningDaemon, ProcessController
 
@@ -266,12 +346,17 @@ def cmd_cache_stats(store: ProvenanceStore, args) -> None:
 
     stats = CacheRegistry(store).stats()
     print(f"{'process type':28}  {'hashed':>7}  {'distinct':>8}  "
-          f"{'cache hits':>10}")
+          f"{'cache hits':>10}  {'collisions':>10}")
     for ptype, row in stats["process_types"].items():
         print(f"{ptype[:28]:28}  {row['hashed_nodes']:>7}  "
-              f"{row['distinct_hashes']:>8}  {row['cache_hits']:>10}")
+              f"{row['distinct_hashes']:>8}  {row['cache_hits']:>10}  "
+              f"{row['hash_collisions']:>10}")
     print(f"\n{stats['hashed_nodes']} hashed process nodes, "
-          f"{stats['cache_hits']} cache hits")
+          f"{stats['cache_hits']} cache hits, "
+          f"{stats['hash_collisions']} hash-collision occurrence(s)")
+    if stats["hash_collisions"]:
+        print("WARNING: same-fingerprint nodes produced different outputs;"
+              " check CACHE_VERSION / exclude_from_hash declarations")
 
 
 def cmd_cache_show(store: ProvenanceStore, args) -> None:
@@ -322,6 +407,10 @@ def main(argv=None) -> None:
     pr.add_argument("pk", type=int)
     ps = proc_sub.add_parser("show")
     ps.add_argument("pk", type=int)
+    pi = proc_sub.add_parser(
+        "inputs", help="dump a process class's input/output spec")
+    pi.add_argument("process_class",
+                    help="e.g. repro.calcjobs:TPUTrainJob or TPUTrainJob")
     for verb in ("pause", "play", "kill", "status"):
         pc = proc_sub.add_parser(verb)
         pc.add_argument("pk", type=int)
@@ -375,6 +464,8 @@ def main(argv=None) -> None:
         cmd_process_report(store, args)
     elif args.cmd == "process" and args.sub == "show":
         cmd_process_show(store, args)
+    elif args.cmd == "process" and args.sub == "inputs":
+        cmd_process_inputs(store, args)
     elif args.cmd == "process" and args.sub in ("pause", "play", "kill",
                                                 "status"):
         cmd_process_control(store, args)

@@ -2,13 +2,17 @@
 # ProcessSpec/ports, the extended state machine, calcfunction/workfunction
 # provenance decorators, and the checkpointable WorkChain outline DSL.
 
+from repro.core.builder import (  # noqa: F401
+    ProcessBuilder, ProcessBuilderNamespace, UnknownPortError,
+)
 from repro.core.datatypes import (  # noqa: F401
     ArrayData, Bool, DataValue, Dict, Float, FolderData, Int, List, Str,
     to_data_value,
 )
 from repro.core.exit_code import ExitCode  # noqa: F401
 from repro.core.ports import (  # noqa: F401
-    InputPort, OutputPort, Port, PortNamespace,
+    UNSPECIFIED, InputPort, OutputPort, Port, PortNamespace,
+    PortSerializationError, PortValidationError,
 )
 from repro.core.process import Process, ProcessKilled  # noqa: F401
 from repro.core.process_functions import calcfunction, workfunction  # noqa: F401

@@ -81,6 +81,14 @@ class Process(StateMachine):
             Process._spec_cache[cls] = spec
         return Process._spec_cache[cls]
 
+    @classmethod
+    def get_builder(cls):
+        """A ProcessBuilder over this class's input ports: tab-completable
+        namespace attribute access, per-assignment validation and raw-value
+        serialization (paper §II.A; launch it via engine/launch.py)."""
+        from repro.core.builder import ProcessBuilder
+        return ProcessBuilder(cls)
+
     # -- construction ------------------------------------------------------------
     def __init__(self, inputs: Mapping[str, Any] | None = None, *,
                  runner=None, parent_pk: int | None = None):
@@ -90,7 +98,11 @@ class Process(StateMachine):
         self.store = self.runner.store
         spec = self.spec()
 
+        # serialize (raw python → DataValue through port serializers) first,
+        # so defaults — including callable ones evaluated per-instantiation —
+        # and caller values are wrapped before validation and fingerprinting
         merged = _merge_defaults(spec.inputs, dict(inputs or {}))
+        merged = spec.inputs.serialize(merged)
         err = spec.validate_inputs(merged)
         if err is not None:
             raise ValueError(f"invalid inputs for {type(self).__name__}: {err}")

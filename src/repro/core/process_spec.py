@@ -1,5 +1,14 @@
 """ProcessSpec (paper §II.A.2–3): declarative input/output ports, nested
-namespaces, exit codes, the WorkChain outline, and port exposing."""
+namespaces, exit codes, the WorkChain outline, and port exposing.
+
+Ports declared here are the launch surface: ``Process.get_builder()``
+mirrors ``spec.inputs`` as a :class:`~repro.core.builder.ProcessBuilder`,
+and a port's ``serializer=`` (e.g. ``spec.input("n", valid_type=Int,
+serializer=Int)``) wraps raw python values both at builder assignment and
+at process construction. ``expose_inputs`` deep-copies the source ports
+(via ``PortNamespace.absorb``), so re-declaring an exposed port afterwards
+— the standard way to specialize an exposed namespace — never mutates the
+source class's spec."""
 
 from __future__ import annotations
 

@@ -261,7 +261,9 @@ class _WhileStepper:
         finished, result = self.child.step(wc)
         if finished:
             self.child = None   # re-check the condition next step
-        return False if finished else False, result
+        # a while-stepper is never finished by its body completing — only
+        # by its condition evaluating false at the top of a future step
+        return False, result
 
     def save(self):
         return {"t": "while", "child": self.child.save() if self.child else None}
@@ -341,13 +343,20 @@ class WorkChain(Process):
     NODE_TYPE = NodeType.WORK_CHAIN
 
     def __init__(self, inputs=None, **kw):
-        super().__init__(inputs, **kw)
+        # chain state must exist before Process.__init__ writes the initial
+        # checkpoint (checkpoint_extras() reads ctx/stepper/awaitables) —
+        # without it a freshly-created chain cannot be shipped to a daemon
+        # worker, which resumes purely from the persisted checkpoint
         self.ctx = AttributeDict()
         self._awaitables: list[Awaitable] = []
         self._stepper = None
+        super().__init__(inputs, **kw)
 
     # -- submitting children (paper §II.B.3.d) ----------------------------------
     def submit(self, process_class, **inputs):
+        """Submit a child process; accepts a Process class (with keyword
+        inputs) or a ProcessBuilder, like the engine/launch.py free
+        functions."""
         return self.runner.submit(process_class, inputs=inputs,
                                   parent_pk=self.pk)
 

@@ -199,12 +199,15 @@ class Daemon:
             self._broker_proc.join(timeout=5)
 
     # -- client-side submission ---------------------------------------------------
-    def submit(self, process_class: type, inputs: dict | None = None) -> int:
+    def submit(self, process_class, inputs: dict | None = None) -> int:
         """Create the process node + initial checkpoint locally, then ship
-        the pk through the durable task queue (paper §III.C.a)."""
+        the pk through the durable task queue (paper §III.C.a). Accepts a
+        Process class + inputs or a ProcessBuilder, like engine/launch.py."""
+        from repro.core.builder import expand_launch_target
         from repro.engine.runner import Runner
         from repro.provenance.store import configure_store, current_store
 
+        process_class, inputs = expand_launch_target(process_class, inputs)
         store = current_store()
         if store.path != self.store_path:
             store = configure_store(self.store_path)

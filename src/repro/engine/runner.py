@@ -90,12 +90,16 @@ class Runner:
                                           {"intent": intent, **kw})
 
     # -- submission --------------------------------------------------------------------
-    def submit(self, process_class: type, inputs: dict | None = None,
+    def submit(self, process_class, inputs: dict | None = None,
                parent_pk: int | None = None):
-        """Instantiate + schedule a process. In distributed (daemon) mode
-        the process node + checkpoint are created locally but execution is
-        shipped through the durable task queue, so any worker can pick it
-        up (and resume it if that worker dies)."""
+        """Instantiate + schedule a process (class or ProcessBuilder). In
+        distributed (daemon) mode the process node + checkpoint are
+        created locally but execution is shipped through the durable task
+        queue, so any worker can pick it up (and resume it if that worker
+        dies). Prefer the free functions in ``engine/launch.py`` — this is
+        the underlying mechanism for explicit-runner use."""
+        from repro.core.builder import expand_launch_target
+        process_class, inputs = expand_launch_target(process_class, inputs)
         process = process_class(inputs=inputs, runner=self,
                                 parent_pk=parent_pk)
         if getattr(self, "distributed", False):
@@ -147,9 +151,12 @@ class Runner:
             f"{type(process).__name__} attempted a real asynchronous wait "
             "inside a synchronous (process function) context")
 
-    def run(self, process_class: type, inputs: dict | None = None
+    def run(self, process_class, inputs: dict | None = None
             ) -> tuple[dict, Process]:
-        """Blockingly run a process to completion on this runner's loop."""
+        """Blockingly run a process (class or ProcessBuilder) to
+        completion on this runner's loop."""
+        from repro.core.builder import expand_launch_target
+        process_class, inputs = expand_launch_target(process_class, inputs)
         process = process_class(inputs=inputs, runner=self)
         if self.loop.is_running():
             raise RuntimeError("Runner.run() cannot be used inside a running "

@@ -196,7 +196,11 @@ def active_param_count(bundle) -> int:
     if cfg.family != "moe":
         return total_param_count(bundle)
     total = 0
-    flat = jax.tree.flatten_with_path(bundle.param_shapes())[0]
+    # jax.tree.flatten_with_path only exists from jax 0.4.38; fall back to
+    # the tree_util spelling on older versions
+    flatten_with_path = getattr(jax.tree, "flatten_with_path",
+                                jax.tree_util.tree_flatten_with_path)
+    flat = flatten_with_path(bundle.param_shapes())[0]
     for path, leaf in flat:
         n = 1
         for d in leaf.shape:

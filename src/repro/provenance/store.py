@@ -84,6 +84,10 @@ CREATE TABLE IF NOT EXISTS logs (
     message TEXT NOT NULL,
     time REAL NOT NULL
 );
+CREATE TABLE IF NOT EXISTS meta (
+    key TEXT PRIMARY KEY,
+    value TEXT
+);
 CREATE INDEX IF NOT EXISTS idx_links_in ON links(in_id);
 CREATE INDEX IF NOT EXISTS idx_links_out ON links(out_id);
 CREATE INDEX IF NOT EXISTS idx_nodes_type ON nodes(node_type);
@@ -209,6 +213,32 @@ class ProvenanceStore:
             self._conn().execute(
                 f"UPDATE nodes SET {', '.join(sets)} WHERE pk=?", vals)
             self._conn().commit()
+
+    # -- store-level counters/metadata (telemetry, e.g. hash collisions) -------
+    def incr_meta(self, key: str, by: int = 1) -> int:
+        """Atomically increment a store-level integer counter; returns the
+        new value. Safe across OS processes (single UPSERT statement)."""
+        with self._lock:
+            self._conn().execute(
+                "INSERT INTO meta (key, value) VALUES (?, ?)"
+                " ON CONFLICT(key) DO UPDATE SET"
+                " value = CAST(CAST(value AS INTEGER) + ? AS TEXT)",
+                (key, str(by), by))
+            self._conn().commit()
+            row = self._conn().execute(
+                "SELECT value FROM meta WHERE key=?", (key,)).fetchone()
+        return int(row["value"])
+
+    def get_meta(self, key: str, default: Any = None) -> Any:
+        row = self._conn().execute(
+            "SELECT value FROM meta WHERE key=?", (key,)).fetchone()
+        return row["value"] if row is not None else default
+
+    def all_meta(self, prefix: str = "") -> dict[str, str]:
+        rows = self._conn().execute(
+            "SELECT key, value FROM meta WHERE key LIKE ?"
+            " ORDER BY key", (prefix + "%",)).fetchall()
+        return {r["key"]: r["value"] for r in rows}
 
     def set_node_hash(self, pk: int, node_hash: str | None) -> None:
         with self._lock:

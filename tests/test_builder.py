@@ -1,0 +1,289 @@
+"""ProcessBuilder: namespace-mirroring attribute access, per-assignment
+validation, serializer wrapping, dotted get/set, _merge, pruning, exposed
+namespaces, and a daemon round-trip (ISSUE 3 tentpole)."""
+
+import time
+
+import pytest
+
+from repro.core import (
+    Bool, Dict, Int, PortValidationError, ProcessBuilder, Str, ToContext,
+    WorkChain,
+)
+from repro.core.builder import expand_launch_target
+from repro.provenance.store import LinkType
+
+
+class SubChain(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("n", valid_type=Int, serializer=Int,
+                   help="how many units to process")
+        spec.input("tag", valid_type=Str, serializer=Str, required=False)
+        spec.output("doubled", valid_type=Int)
+        spec.outline(cls.go)
+
+    def go(self):
+        self.out("doubled", Int(self.inputs["n"].value * 2))
+
+
+class TopChain(WorkChain):
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.expose_inputs(SubChain, namespace="sub")
+        spec.input("flag", valid_type=Bool, serializer=Bool,
+                   default=lambda: Bool(False))
+        spec.output("result", valid_type=Int)
+        spec.outline(cls.launch, cls.collect)
+
+    def launch(self):
+        return ToContext(child=self.submit(
+            SubChain, **self.exposed_inputs(SubChain, "sub")))
+
+    def collect(self):
+        self.out("result", self.ctx.child.outputs["doubled"])
+
+
+# ---------------------------------------------------------------------------
+# construction and attribute access
+# ---------------------------------------------------------------------------
+
+def test_get_builder_mirrors_port_tree():
+    b = TopChain.get_builder()
+    assert isinstance(b, ProcessBuilder)
+    assert b.process_class is TopChain
+    # nested namespaces pre-exist as sub-builders; leaves are unset
+    assert "sub" in dir(b)
+    assert "n" in dir(b.sub)
+    with pytest.raises(AttributeError):
+        b.sub.n  # unset leaf
+
+    b.sub.n = Int(3)
+    assert b.sub.n.value == 3
+
+
+def test_builder_doc_carries_help_text():
+    b = TopChain.get_builder()
+    assert "flag" in b.__doc__
+    assert "how many units to process" in b.sub.__doc__
+    assert "sub" in repr(b) or "ProcessBuilder" in repr(b)
+
+
+def test_unknown_port_rejected_at_assignment():
+    b = TopChain.get_builder()
+    with pytest.raises(AttributeError, match="not a declared input port"):
+        b.bogus = 1
+    with pytest.raises(AttributeError, match="sub.bogus"):
+        b.sub.bogus = 1
+
+
+def test_type_rejected_at_assignment_with_path():
+    b = TopChain.get_builder()
+    with pytest.raises(PortValidationError, match="sub.n"):
+        b.sub.n = Str("nope")   # Str is a DataValue: serializer skipped,
+                                # valid_type check fails with the full path
+
+
+def test_serializer_wraps_raw_python_on_assignment():
+    b = TopChain.get_builder()
+    b.sub.n = 3
+    assert isinstance(b.sub.n, Int) and b.sub.n.value == 3
+    b.flag = True
+    assert isinstance(b.flag, Bool)
+    with pytest.raises(PortValidationError, match="sub.n"):
+        b.sub.n = "not-a-number"
+
+
+def test_dotted_path_get_set():
+    b = TopChain.get_builder()
+    b["sub.n"] = 5
+    assert b["sub.n"].value == 5
+    assert b.sub.n.value == 5
+
+
+def test_merge_of_nested_dicts():
+    b = TopChain.get_builder()
+    b._merge({"sub": {"n": 4}, "metadata": {"label": "merged"}})
+    assert b.sub.n.value == 4
+    assert b.metadata.label == "merged"
+    # merge does not clear siblings
+    b._merge({"sub": {"tag": "t"}})
+    assert b.sub.n.value == 4 and b.sub.tag.value == "t"
+
+
+def test_namespace_dict_assignment_replaces_contents():
+    b = TopChain.get_builder()
+    b.sub.n = 1
+    b.sub.tag = "old"
+    b.sub = {"n": 9}
+    assert b.sub.n.value == 9
+    with pytest.raises(AttributeError):
+        b.sub.tag
+
+
+def test_namespace_dict_assignment_is_atomic():
+    """A failed namespace replacement must leave the previous contents
+    untouched — no partial write, no lost values."""
+    b = TopChain.get_builder()
+    b.sub.n = 1
+    b.sub.tag = "keep"
+    with pytest.raises(PortValidationError):
+        b.sub = {"n": 2, "bogus": 3}    # bogus is undeclared → fails
+    assert b.sub.n.value == 1           # old state fully intact
+    assert b.sub.tag.value == "keep"
+
+
+def test_unknown_port_error_catchable_both_ways():
+    """Undeclared-port assignment is catchable as the documented
+    PortValidationError AND as the pythonic AttributeError, through
+    attribute, mapping and _merge entry points alike."""
+    b = TopChain.get_builder()
+    with pytest.raises(PortValidationError):
+        b.bogus = 1
+    with pytest.raises(PortValidationError):
+        b["bogus"] = 1
+    with pytest.raises(PortValidationError):
+        b._merge({"bogus": 1})
+
+
+def test_inputs_prunes_unset_optionals_and_empty_namespaces():
+    b = TopChain.get_builder()
+    b.sub.n = 2
+    inputs = b._inputs(prune=True)
+    assert inputs == {"sub": {"n": Int(2)}}
+    assert "metadata" not in inputs and "flag" not in inputs
+    # unpruned keeps the empty namespaces
+    assert "metadata" in b._inputs(prune=False)
+
+
+def test_dynamic_namespace_accepts_undeclared_keys():
+    b = TopChain.get_builder()
+    b.metadata.description = "free-form"
+    b.metadata.custom_key = {"arbitrary": 1}   # metadata is dynamic
+    assert b.metadata.custom_key == {"arbitrary": 1}
+
+
+def test_expand_launch_target_shapes():
+    b = TopChain.get_builder()
+    b.sub.n = 3
+    cls, inputs = expand_launch_target(b, {"flag": Bool(True)})
+    assert cls is TopChain
+    assert inputs["sub"]["n"].value == 3 and inputs["flag"].value is True
+    cls2, inputs2 = expand_launch_target(TopChain, {"sub": {"n": Int(1)}})
+    assert cls2 is TopChain and inputs2["sub"]["n"].value == 1
+    with pytest.raises(TypeError):
+        expand_launch_target(42)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: builder → run, provenance, exposed namespaces
+# ---------------------------------------------------------------------------
+
+def test_builder_run_end_to_end_with_provenance(store, runner):
+    from repro.engine.launch import run_get_node
+
+    b = TopChain.get_builder()
+    b.sub.n = 3          # raw int: serialized to Int(3)
+    results, node = run_get_node(b)
+    assert node.is_finished_ok
+    assert results["result"].value == 6
+    # the serialized raw int is a real linked input node on the child
+    child_pk = store.outgoing(node.pk, LinkType.CALL_WORK)[0][0]
+    inputs = {label: store.load_data(pk)
+              for pk, _, label in store.incoming(child_pk, LinkType.INPUT_WORK)}
+    assert inputs["n"] == Int(3)
+
+
+def test_exposed_namespace_builder_roundtrip(store, runner):
+    """Builder assignment into an exposed namespace reaches the child via
+    WorkChain.exposed_inputs — the full expose/builder round-trip."""
+    from repro.engine.launch import run_get_node
+
+    b = TopChain.get_builder()
+    b.sub.n = 10
+    b.sub.tag = "exposed"
+    results, node = run_get_node(b)
+    assert results["result"].value == 20
+    child_pk = store.outgoing(node.pk, LinkType.CALL_WORK)[0][0]
+    labels = {label for _, _, label in store.incoming(child_pk)}
+    assert {"n", "tag"} <= labels
+
+
+def test_callable_default_with_serializer_per_instantiation(store, runner):
+    class LambdaDefault(WorkChain):
+        @classmethod
+        def define(cls, spec):
+            super().define(spec)
+            spec.input("n", valid_type=Int, serializer=Int,
+                       default=lambda: 7)
+            spec.output("n_out", valid_type=Int)
+            spec.outline(cls.go)
+
+        def go(self):
+            self.out("n_out", self.inputs["n"])
+
+    p1 = LambdaDefault(inputs={}, runner=runner)
+    p2 = LambdaDefault(inputs={}, runner=runner)
+    # each instantiation evaluates the lambda and serializes it freshly
+    assert isinstance(p1.inputs["n"], Int) and p1.inputs["n"].value == 7
+    assert p1.inputs["n"] is not p2.inputs["n"]
+
+
+def test_construction_serializes_raw_dict_inputs(store, runner):
+    """The serializer contract holds for plain-dict launches too — the
+    construction path serializes before validating."""
+    outputs, proc = runner.run(SubChain, {"n": 21})
+    assert proc.is_finished_ok
+    assert outputs["doubled"].value == 42
+
+
+def test_builder_submit_local(store, runner):
+    from repro.engine.launch import submit
+
+    b = SubChain.get_builder()
+    b.n = 4
+    handle = submit(b)
+    node = runner.run_until_complete(runner.wait(handle))
+    assert node["process_state"] == "finished"
+    assert node["exit_status"] == 0
+
+
+# ---------------------------------------------------------------------------
+# daemon round-trip: builder-built inputs survive the durable task queue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_builder_roundtrip_through_daemon(tmp_path):
+    from repro.calcjobs import TPUTrainJob
+    from repro.engine.daemon import Daemon
+    from repro.provenance.store import configure_store
+
+    daemon = Daemon(str(tmp_path), workers=1, slots=4)
+    daemon.start()
+    try:
+        store = configure_store(daemon.store_path)
+        b = TPUTrainJob.get_builder()
+        b.config = Dict({"arch": "qwen2-0.5b", "steps": 1, "batch": 1,
+                         "seq": 8, "seed": 3})
+        b.metadata.label = "builder-daemon-job"
+        pk = daemon.submit(b)
+
+        t0 = time.time()
+        while time.time() - t0 < 150:
+            node = store.get_node(pk)
+            if node and node["process_state"] in ("finished", "excepted",
+                                                  "killed"):
+                break
+            daemon.supervise()
+            time.sleep(0.3)
+        else:
+            raise TimeoutError(f"process {pk} did not finish")
+        assert node["process_state"] == "finished"
+        assert node["exit_status"] == 0
+        assert node["label"] == "builder-daemon-job"
+        labels = {label for _, _, label in store.incoming(pk)}
+        assert "config" in labels
+    finally:
+        daemon.stop()

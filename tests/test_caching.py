@@ -451,6 +451,67 @@ class TestPolicy:
 
 
 # ---------------------------------------------------------------------------
+# hash-collision telemetry (same fingerprint, different outputs)
+# ---------------------------------------------------------------------------
+
+class TestCollisionTelemetry:
+    def _make_hidden_input_cls(self):
+        class HiddenInput(Process):
+            """Output depends on class state the fingerprint cannot see —
+            the canonical way a hash collision arises in practice."""
+            NODE_TYPE = NodeType.CALC_FUNCTION
+            bump = 0
+
+            @classmethod
+            def define(cls, spec):
+                super().define(spec)
+                spec.input("x", valid_type=Int)
+                spec.output("y", valid_type=Int)
+
+            async def run(self):
+                self.out("y", Int(self.inputs["x"].value + HiddenInput.bump))
+
+        return HiddenInput
+
+    def test_collision_counted_on_hit_path(self, store, runner):
+        HiddenInput = self._make_hidden_input_cls()
+        # two cold runs, same fingerprint, different outputs
+        runner.run(HiddenInput, {"x": Int(1)})
+        HiddenInput.bump = 100
+        runner.run(HiddenInput, {"x": Int(1)})
+
+        registry = CacheRegistry(store)
+        with enable_caching():
+            _, proc = runner.run(HiddenInput, {"x": Int(1)})
+        assert proc.is_finished_ok
+        counts = registry.collision_counts()
+        assert counts.get("HiddenInput") == 1
+        assert registry.stats()["hash_collisions"] == 1
+        per_type = registry.stats()["process_types"]["HiddenInput"]
+        assert per_type["hash_collisions"] == 1
+
+    def test_no_collision_when_outputs_agree(self, store, runner):
+        runner.run(Doubler, {"x": Int(2)})
+        runner.run(Doubler, {"x": Int(2)})
+        registry = CacheRegistry(store)
+        with enable_caching():
+            runner.run(Doubler, {"x": Int(2)})
+        assert registry.collision_counts() == {}
+        assert registry.stats()["hash_collisions"] == 0
+
+    def test_counter_is_durable_and_cumulative(self, store, runner):
+        HiddenInput = self._make_hidden_input_cls()
+        runner.run(HiddenInput, {"x": Int(1)})
+        HiddenInput.bump = 7
+        runner.run(HiddenInput, {"x": Int(1)})
+        with enable_caching():
+            runner.run(HiddenInput, {"x": Int(1)})
+            runner.run(HiddenInput, {"x": Int(1)})
+        # each cache-hit lookup that saw the mismatch counts once
+        assert CacheRegistry(store).collision_counts()["HiddenInput"] >= 2
+
+
+# ---------------------------------------------------------------------------
 # CalcJob fast path: no scheduler submission on a hit
 # ---------------------------------------------------------------------------
 

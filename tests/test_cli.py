@@ -56,3 +56,28 @@ def test_stats(profile, capsys):
     out = capsys.readouterr().out
     assert "process.calcfunction" in out
     assert "unfinished processes: 0" in out
+
+
+def test_process_inputs_spec_dump(profile, capsys):
+    cli.main(["-p", profile, "process", "inputs",
+              "repro.calcjobs:TPUTrainJob"])
+    out = capsys.readouterr().out
+    assert "TPUTrainJob" in out
+    assert "config" in out and "Dict" in out and "required" in out
+    assert "metadata/" in out and "non_db" in out
+    assert "ERROR_NAN_LOSS" in out
+
+
+def test_process_inputs_bare_name_and_bad_name(profile, capsys):
+    cli.main(["-p", profile, "process", "inputs", "TPUTrainJob"])
+    out = capsys.readouterr().out
+    assert "repro.calcjobs" in out
+    with pytest.raises(SystemExit, match="cannot resolve"):
+        cli.main(["-p", profile, "process", "inputs", "NopeNotAClass"])
+
+
+def test_cache_stats_reports_collisions(profile, capsys):
+    cli.main(["-p", profile, "cache", "stats"])
+    out = capsys.readouterr().out
+    assert "collisions" in out
+    assert "0 hash-collision occurrence(s)" in out

@@ -3,8 +3,8 @@
 import pytest
 from _hypothesis_compat import given, strategies as st
 
-from repro.core import Int, Float, ProcessSpec
-from repro.core.ports import InputPort, PortNamespace
+from repro.core import Int, Float, ProcessSpec, Str, WorkChain
+from repro.core.ports import UNSPECIFIED, InputPort, PortNamespace
 
 
 def test_port_validation_type():
@@ -27,7 +27,88 @@ def test_port_default_and_required():
     assert p.default.value == 2
     q = InputPort("b", valid_type=Int)
     assert q.required
-    assert "required" in q.validate(None)
+    assert "required" in q.validate(UNSPECIFIED)
+
+
+def test_explicit_none_distinguished_from_absent():
+    """A provided None is not the same as an absent key: optional typed
+    ports must reject it, and required ports must say which happened."""
+    req = InputPort("r", valid_type=Int)
+    assert "was not provided" in req.validate(UNSPECIFIED)
+    assert "explicitly passed None" in req.validate(None)
+
+    opt = InputPort("o", valid_type=Int, required=False)
+    assert opt.validate(UNSPECIFIED) is None          # absent: fine
+    err = opt.validate(None)                          # explicit None: not an Int
+    assert err is not None and "explicitly passed None" in err
+
+    # untyped optional ports still accept an explicit None
+    free = InputPort("f", required=False)
+    assert free.validate(None) is None
+
+    # NoneType in valid_type opts in to explicit None
+    nullable = InputPort("n", valid_type=(Int, type(None)), required=False)
+    assert nullable.validate(None) is None
+
+
+def test_namespace_distinguishes_none_from_absent():
+    ns = PortNamespace("inputs")
+    ns["a"] = InputPort("a", valid_type=Int, required=False)
+    ns["b"] = InputPort("b", valid_type=Int)
+    assert ns.validate({"b": Int(1)}) is None                 # a absent: ok
+    err = ns.validate({"a": None, "b": Int(1)})               # a explicit None
+    assert err is not None and "explicitly passed None" in err and "a" in err
+    err = ns.validate({"b": None})
+    assert "required" in err and "explicitly passed None" in err
+
+
+def test_port_serializer_wraps_raw_values():
+    p = InputPort("n", valid_type=Int, serializer=Int)
+    wrapped = p.serialize(3)
+    assert isinstance(wrapped, Int) and wrapped.value == 3
+    # already-valid values pass through untouched
+    v = Int(5)
+    assert p.serialize(v) is v
+    # namespace-level walk serializes leaves, passes undeclared through
+    ns = PortNamespace("inputs", dynamic=True)
+    ns["n"] = p
+    out = ns.serialize({"n": 7, "free": "x"})
+    assert isinstance(out["n"], Int) and out["free"] == "x"
+
+
+def test_absorb_deep_copies_ports():
+    """expose_inputs must not alias Port objects between specs: mutating
+    the exposing spec cannot leak into the source class (regression)."""
+
+    class Source(WorkChain):
+        @classmethod
+        def define(cls, spec):
+            super().define(spec)
+            spec.input("x", valid_type=Int)
+            spec.input("nested.y", valid_type=Int, default=Int(1))
+
+    class Exposer(WorkChain):
+        @classmethod
+        def define(cls, spec):
+            super().define(spec)
+            spec.expose_inputs(Source, namespace="src")
+            # override the exposed port after absorbing — must be local
+            spec.input("src.x", valid_type=Str)
+
+    exposed = Exposer.spec().inputs["src"]
+    source = Source.spec().inputs
+    assert exposed["x"] is not source["x"]
+    assert exposed["nested"] is not source["nested"]
+    assert exposed["nested.y"] is not source["nested.y"]
+    # the override changed only the exposing spec
+    assert Exposer.spec().inputs["src.x"].valid_type == (Str,)
+    assert source["x"].valid_type == (Int,)
+    # mutating a copied port does not touch the source either
+    exposed["nested.y"].required = True
+    assert source["nested.y"].required is False
+    # deep-copied sentinel defaults survive with identity intact
+    assert not exposed["x"].has_default
+    assert exposed["nested.y"].default == Int(1)
 
 
 def test_nested_namespace_creation():

@@ -243,6 +243,78 @@ class TwoPhase(WorkChain):
         self.out("v", Int(self.ctx.v + 1))
 
 
+class WhileCrash(WorkChain):
+    """Crashes inside the while_ body on a chosen iteration — exercises
+    stepper save/load of a partially-executed loop body."""
+
+    crash_at = None
+    executed = []
+
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("n", valid_type=Int, default=Int(4))
+        spec.output("trace", valid_type=Int)
+        spec.outline(
+            cls.setup,
+            while_(cls.below)(
+                cls.first_half,
+                cls.second_half,
+            ),
+            cls.finish,
+        )
+
+    def setup(self):
+        self.ctx.i = 0
+        self.ctx.halves = 0
+
+    def below(self):
+        return self.ctx.i < self.inputs["n"].value
+
+    def first_half(self):
+        self.ctx.halves += 1
+        WhileCrash.executed.append(f"first[{self.ctx.i}]")
+
+    def second_half(self):
+        if WhileCrash.crash_at == self.ctx.i:
+            WhileCrash.crash_at = None
+            WhileCrash.executed.append(f"crash[{self.ctx.i}]")
+            raise KeyboardInterrupt   # hard worker death mid-body
+        WhileCrash.executed.append(f"second[{self.ctx.i}]")
+        self.ctx.halves += 1
+        self.ctx.i += 1
+
+    def finish(self):
+        self.out("trace", Int(self.ctx.halves))
+
+
+def test_stepper_resume_mid_while_body(store, runner):
+    """Kill a chain between the two steps of a while_ body; the resumed
+    stepper must re-enter the SAME iteration at the interrupted step —
+    not re-run the completed first half, not skip the iteration."""
+    WhileCrash.executed = []
+    WhileCrash.crash_at = 2
+    proc = WhileCrash(inputs={"n": Int(4)}, runner=runner)
+    pk = proc.pk
+    with pytest.raises(KeyboardInterrupt):
+        runner.loop.run_until_complete(proc.step_until_terminated())
+
+    ckpt = store.load_checkpoint(pk)
+    assert ckpt is not None
+    resumed = Process.recreate_from_checkpoint(ckpt, runner=runner)
+    # position restored mid-loop: iteration 2, first half already done
+    assert resumed.ctx.i == 2 and resumed.ctx.halves == 5
+    runner.loop.run_until_complete(resumed.step_until_terminated())
+    assert resumed.is_finished_ok
+    # 4 iterations x 2 halves, none double-counted across the crash
+    assert resumed.outputs["trace"].value == 8
+    assert WhileCrash.executed == [
+        "first[0]", "second[0]", "first[1]", "second[1]",
+        "first[2]", "crash[2]",            # original run dies here
+        "second[2]", "first[3]", "second[3]",   # resume: same iteration,
+    ]                                           # interrupted step only
+
+
 def test_checkpoint_resume_mid_outline(store, runner):
     """Kill a workchain between steps; recreate from checkpoint; the
     context and outline position survive (paper §II.B.3.c). phase1 must
