@@ -1,0 +1,144 @@
+"""Archive round-trip cost and the imported-cache-hit speedup.
+
+Measures the full cross-profile sharing loop on one machine:
+
+* **compute** — N deterministic CPU-bound calculations in profile A;
+* **export** — closure traversal + zip serialization of the finished
+  graph (reports nodes/s and archive MB);
+* **import** — merge into a fresh profile B with pk remapping;
+* **warm relaunch** — the same N submissions in B with caching enabled:
+  every process must short-circuit against an imported node.
+
+The acceptance bar: every relaunched process is a cache hit whose
+`cached_from` resolves to an imported finished-ok node, and the warm
+relaunch beats recomputation by >= 5x.
+
+    PYTHONPATH=src python -m benchmarks.archive_bench --processes 200
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.caching import disable_caching, enable_caching
+from repro.core import Int, Process, ProcessSpec
+from repro.engine.runner import Runner, set_default_runner
+from repro.provenance import (
+    NodeType, ProvenanceStore, configure_store, export_archive,
+    import_archive,
+)
+
+
+class HashGrind(Process):
+    """Iterated sha256 over a seed-derived buffer (same kernel as
+    cache_bench, so numbers are comparable)."""
+
+    NODE_TYPE = NodeType.CALC_FUNCTION
+
+    @classmethod
+    def define(cls, spec: ProcessSpec) -> None:
+        super().define(spec)
+        spec.input("seed", valid_type=Int)
+        spec.input("rounds", valid_type=Int, default=Int(800))
+        spec.output("digest", valid_type=Int)
+
+    async def run(self):
+        buf = np.random.default_rng(self.inputs["seed"].value).bytes(1 << 14)
+        for _ in range(self.inputs["rounds"].value):
+            buf = hashlib.sha256(buf).digest() + buf[:1 << 14]
+        self.out("digest",
+                 Int(int.from_bytes(hashlib.sha256(buf).digest()[:6], "big")))
+
+
+def run_pass(runner: Runner, n: int, rounds: int) -> float:
+    async def main() -> float:
+        t0 = time.perf_counter()
+        handles = [runner.submit(HashGrind, {"seed": Int(i),
+                                             "rounds": Int(rounds)})
+                   for i in range(n)]
+        for h in handles:
+            await h.process.wait_done()
+        assert all(h.process.is_finished_ok for h in handles)
+        return time.perf_counter() - t0
+
+    return runner.loop.run_until_complete(main())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--processes", type=int, default=200)
+    ap.add_argument("--rounds", type=int, default=800)
+    ap.add_argument("--slots", type=int, default=100)
+    args = ap.parse_args()
+    workdir = tempfile.mkdtemp(prefix="archive_bench_")
+    archive = os.path.join(workdir, "results.zip")
+
+    # -- profile A: compute + export ---------------------------------------
+    # stores are in-memory (cache_bench methodology: measure engine and
+    # archive cost, not sqlite fsync); the archive itself is a real file
+    store_a = configure_store(":memory:")
+    runner_a = Runner(store=store_a, slots=args.slots)
+    set_default_runner(runner_a)
+    with disable_caching():
+        t_compute = run_pass(runner_a, args.processes, args.rounds)
+
+    t0 = time.perf_counter()
+    manifest = export_archive(store_a, archive)
+    t_export = time.perf_counter() - t0
+    size_mb = os.path.getsize(archive) / 1e6
+
+    # -- profile B: import + warm relaunch ---------------------------------
+    store_b = configure_store(":memory:")
+    runner_b = Runner(store=store_b, slots=args.slots)
+    set_default_runner(runner_b)
+    t0 = time.perf_counter()
+    result = import_archive(store_b, archive)
+    t_import = time.perf_counter() - t0
+    assert result.nodes_imported == manifest["nodes"], "fresh store: all new"
+
+    with enable_caching(HashGrind):
+        t_warm = run_pass(runner_b, args.processes, args.rounds)
+
+    # every warm node must clone an *imported* finished-ok node
+    rows = store_b._conn().execute(
+        "SELECT pk, attributes FROM nodes WHERE process_type='HashGrind'"
+        " ORDER BY pk").fetchall()
+    warm_rows = rows[args.processes:]
+    hits = 0
+    for r in warm_rows:
+        attrs = json.loads(r["attributes"] or "{}")
+        src_pk = attrs.get("cached_from_pk")
+        if src_pk is None:
+            continue
+        src = store_b.get_node(src_pk)
+        assert src["process_state"] == "finished" and \
+            src["exit_status"] == 0, f"bad cache source for {r['pk']}"
+        hits += 1
+    speedup = t_compute / t_warm
+
+    n = manifest["nodes"]
+    print(f"processes:        {args.processes}  ({n} graph nodes)")
+    print(f"compute (A):      {t_compute:6.2f}s")
+    print(f"export:           {t_export:6.2f}s  "
+          f"({n / t_export:8.0f} nodes/s, {size_mb:.1f} MB)")
+    print(f"import (B):       {t_import:6.2f}s  ({n / t_import:8.0f} nodes/s)")
+    print(f"warm relaunch:    {t_warm:6.2f}s")
+    print(f"imported hits:    {hits}/{len(warm_rows)}")
+    print(f"speedup:          {speedup:.1f}x "
+          f"({'PASS' if speedup >= 5 else 'FAIL'}: bar is 5x)")
+    if hits != len(warm_rows) or speedup < 5:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

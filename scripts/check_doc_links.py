@@ -1,0 +1,56 @@
+"""Fail when docs contain dead relative links.
+
+Scans markdown files (default: docs/*.md, README.md) for inline
+`[text](target)` links, resolves each *relative* target against the
+file's directory and exits non-zero listing every target that does not
+exist. External (http/https/mailto) links and pure in-page anchors are
+skipped; a `path#fragment` target is checked for the path part only.
+
+    python scripts/check_doc_links.py [files...]
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline links only; reference-style links are not used in this repo.
+# [^)\s]+ keeps the match clear of ") " so trailing prose is not swallowed
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_file(path: str) -> list[tuple[int, str]]:
+    base = os.path.dirname(os.path.abspath(path))
+    dead: list[tuple[int, str]] = []
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            for target in _LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                if target.startswith("#"):
+                    continue  # in-page anchor
+                rel = target.split("#", 1)[0]
+                if not os.path.exists(os.path.join(base, rel)):
+                    dead.append((lineno, target))
+    return dead
+
+
+def main(argv: list[str]) -> int:
+    files = argv or sorted(glob.glob("docs/*.md")) + \
+        [f for f in ("README.md",) if os.path.exists(f)]
+    failures = 0
+    for path in files:
+        for lineno, target in check_file(path):
+            print(f"{path}:{lineno}: dead link -> {target}")
+            failures += 1
+    if failures:
+        print(f"\n{failures} dead link(s)")
+        return 1
+    print(f"checked {len(files)} file(s): all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import sqlite3
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -173,18 +174,39 @@ class CacheRegistry:
         Give a pk, a process_type, or neither (= everything). Returns the
         number of nodes invalidated."""
         conn = self.store._conn()
+        # also stamp `cache_invalidated` so `repro cache backfill` knows
+        # the cleared fingerprint was deliberate and must not be restored
+        mark = ("attributes=json_patch(COALESCE(attributes,'{}'),"
+                " '{\"cache_invalidated\": true}')")
         with self.store._lock:
-            if pk is not None:
-                cur = conn.execute(
-                    "UPDATE nodes SET node_hash=NULL WHERE pk=?"
-                    " AND node_hash IS NOT NULL", (pk,))
-            elif process_type is not None:
-                cur = conn.execute(
-                    "UPDATE nodes SET node_hash=NULL WHERE process_type=?"
-                    " AND node_hash IS NOT NULL", (process_type,))
-            else:
-                cur = conn.execute(
-                    "UPDATE nodes SET node_hash=NULL"
-                    " WHERE node_hash IS NOT NULL")
+            try:
+                if pk is not None:
+                    cur = conn.execute(
+                        f"UPDATE nodes SET node_hash=NULL, {mark} WHERE pk=?"
+                        " AND node_hash IS NOT NULL", (pk,))
+                elif process_type is not None:
+                    cur = conn.execute(
+                        f"UPDATE nodes SET node_hash=NULL, {mark}"
+                        " WHERE process_type=?"
+                        " AND node_hash IS NOT NULL", (process_type,))
+                else:
+                    cur = conn.execute(
+                        f"UPDATE nodes SET node_hash=NULL, {mark}"
+                        " WHERE node_hash IS NOT NULL")
+            except sqlite3.OperationalError:
+                # sqlite built without JSON1: clear the hashes unmarked
+                # (backfill may then re-fingerprint these nodes)
+                if pk is not None:
+                    cur = conn.execute(
+                        "UPDATE nodes SET node_hash=NULL WHERE pk=?"
+                        " AND node_hash IS NOT NULL", (pk,))
+                elif process_type is not None:
+                    cur = conn.execute(
+                        "UPDATE nodes SET node_hash=NULL WHERE process_type=?"
+                        " AND node_hash IS NOT NULL", (process_type,))
+                else:
+                    cur = conn.execute(
+                        "UPDATE nodes SET node_hash=NULL"
+                        " WHERE node_hash IS NOT NULL")
             conn.commit()
         return cur.rowcount

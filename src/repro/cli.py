@@ -9,6 +9,13 @@
     PYTHONPATH=src python -m repro.cli -p <profile.db> cache stats
     PYTHONPATH=src python -m repro.cli -p <profile.db> cache show <pk>
     PYTHONPATH=src python -m repro.cli -p <profile.db> cache invalidate --process-type Foo
+    PYTHONPATH=src python -m repro.cli -p <profile.db> cache backfill [--dry-run]
+
+Provenance archives (cross-profile export/import, docs/archive.md):
+
+    repro -p <profile.db> archive create -o results.zip --pk 42 [--all]
+    repro -p <profile.db> archive inspect results.zip
+    repro -p <other.db>   archive import results.zip
 
 Control-plane verbs (the event-driven engine surface):
 
@@ -381,6 +388,87 @@ def cmd_cache_show(store: ProvenanceStore, args) -> None:
     print(f"  equivalents: {eq if eq else 'none'}")
 
 
+def cmd_cache_backfill(store: ProvenanceStore, args) -> None:
+    """Re-hash legacy (pre-caching) nodes so they serve cache hits."""
+    from repro.caching.backfill import backfill_hashes
+
+    stats = backfill_hashes(
+        store,
+        resolve_modules=args.resolve,
+        process_types=args.process_type or None,
+        batch_size=args.batch_size,
+        dry_run=args.dry_run,
+        include_invalidated=args.include_invalidated,
+        progress=print)
+    verb = "would hash" if stats.dry_run else "hashed"
+    print(f"{verb} {stats.hashed} of {stats.scanned} legacy node(s)")
+    for ptype, n in sorted(stats.by_type.items()):
+        print(f"  {ptype:28} {n}")
+    if stats.skipped_unresolvable:
+        print(f"  {stats.skipped_unresolvable} skipped: process class not "
+              "importable (pass --resolve <module> for classes defined "
+              "outside repro.core/repro.calcjobs)")
+    if stats.skipped_invalidated:
+        print(f"  {stats.skipped_invalidated} skipped: fingerprint was "
+              "deliberately invalidated (--include-invalidated to re-hash)")
+    if stats.skipped_error:
+        print(f"  {stats.skipped_error} skipped: input reconstruction or "
+              "hashing failed")
+    if stats.collisions:
+        print(f"WARNING: {stats.collisions} backfilled node(s) join an "
+              "equivalence class with differing outputs (hash collision)")
+
+
+def cmd_archive_create(store: ProvenanceStore, args) -> None:
+    from repro.provenance.archive import export_archive
+
+    pks = args.pk or None
+    if not args.all and not pks:
+        sys.exit("give node selections with --pk (repeatable), or --all")
+    manifest = export_archive(
+        store, args.output, pks,
+        ancestors=not args.no_ancestors,
+        descendants=not args.no_descendants,
+        source=os.path.abspath(args.profile))
+    print(f"wrote {args.output}: {manifest['nodes']} node(s), "
+          f"{manifest['links']} link(s), {manifest['logs']} log(s), "
+          f"{manifest['payload_files']} array payload(s)")
+    print(f"content digest {manifest['content_digest']}")
+
+
+def cmd_archive_inspect(store: ProvenanceStore, args) -> None:
+    from repro.provenance.archive import ArchiveError, read_manifest
+
+    try:
+        manifest = read_manifest(args.archive)
+    except ArchiveError as exc:
+        sys.exit(str(exc))
+    print(f"{args.archive} (archive version "
+          f"{manifest['archive_version']})")
+    if manifest.get("source"):
+        print(f"  source:  {manifest['source']}")
+    print(f"  nodes:   {manifest['nodes']}")
+    for ntype, n in manifest.get("node_types", {}).items():
+        print(f"    {ntype:24} {n}")
+    print(f"  links:   {manifest['links']}")
+    print(f"  logs:    {manifest['logs']}")
+    print(f"  arrays:  {manifest['payload_files']}")
+    print(f"  digest:  {manifest['content_digest']}")
+
+
+def cmd_archive_import(store: ProvenanceStore, args) -> None:
+    from repro.provenance.archive import ArchiveError, import_archive
+
+    try:
+        result = import_archive(store, args.archive,
+                                dedup=not args.no_dedup, progress=print)
+    except ArchiveError as exc:
+        sys.exit(str(exc))
+    if result.nodes_imported == 0:
+        print("nothing new to import (all archive nodes already present "
+              "or content-equivalent)")
+
+
 def cmd_cache_invalidate(store: ProvenanceStore, args) -> None:
     from repro.caching.registry import CacheRegistry
 
@@ -454,6 +542,40 @@ def main(argv=None) -> None:
     ci.add_argument("--pk", type=int, default=None)
     ci.add_argument("--process-type", default="")
     ci.add_argument("--all", action="store_true")
+    cb = cache_sub.add_parser(
+        "backfill", help="re-hash legacy (pre-caching) process nodes")
+    cb.add_argument("--dry-run", action="store_true",
+                    help="report what would be hashed without writing")
+    cb.add_argument("--batch-size", type=int, default=200)
+    cb.add_argument("--process-type", action="append", default=[],
+                    help="only backfill these process types (repeatable)")
+    cb.add_argument("--resolve", action="append", default=[],
+                    metavar="MODULE",
+                    help="extra module(s) to import process classes from")
+    cb.add_argument("--include-invalidated", action="store_true",
+                    help="also re-hash deliberately invalidated nodes")
+
+    p_arch = sub.add_parser(
+        "archive", help="export/import provenance between profiles")
+    arch_sub = p_arch.add_subparsers(dest="sub", required=True)
+    ac = arch_sub.add_parser("create")
+    ac.add_argument("-o", "--output", required=True,
+                    help="archive file to write (zip)")
+    ac.add_argument("--pk", type=int, action="append", default=[],
+                    help="seed node(s); the export is their graph closure")
+    ac.add_argument("--all", action="store_true",
+                    help="export the whole profile")
+    ac.add_argument("--no-ancestors", action="store_true",
+                    help="do not traverse to provenance ancestors")
+    ac.add_argument("--no-descendants", action="store_true",
+                    help="do not traverse to created data / sub-calls")
+    ai = arch_sub.add_parser("inspect")
+    ai.add_argument("archive")
+    am = arch_sub.add_parser("import")
+    am.add_argument("archive")
+    am.add_argument("--no-dedup", action="store_true",
+                    help="import content-equivalent finished-ok nodes "
+                         "instead of mapping them onto existing ones")
 
     args = ap.parse_args(argv)
     store = ProvenanceStore(args.profile)
@@ -483,6 +605,14 @@ def main(argv=None) -> None:
         cmd_cache_show(store, args)
     elif args.cmd == "cache" and args.sub == "invalidate":
         cmd_cache_invalidate(store, args)
+    elif args.cmd == "cache" and args.sub == "backfill":
+        cmd_cache_backfill(store, args)
+    elif args.cmd == "archive" and args.sub == "create":
+        cmd_archive_create(store, args)
+    elif args.cmd == "archive" and args.sub == "inspect":
+        cmd_archive_inspect(store, args)
+    elif args.cmd == "archive" and args.sub == "import":
+        cmd_archive_import(store, args)
 
 
 if __name__ == "__main__":

@@ -6,3 +6,12 @@ from repro.provenance.store import (  # noqa: F401
     configure_store,
     current_store,
 )
+from repro.provenance.archive import (  # noqa: F401
+    ARCHIVE_VERSION,
+    ArchiveError,
+    ImportResult,
+    compute_closure,
+    export_archive,
+    import_archive,
+    read_manifest,
+)

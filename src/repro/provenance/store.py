@@ -17,6 +17,7 @@ Graph model:
 
 from __future__ import annotations
 
+import contextlib
 import enum
 import json
 import os
@@ -134,6 +135,31 @@ class ProvenanceStore:
             conn.close()
             self._local.conn = None
 
+    # -- batched writes ---------------------------------------------------------
+    @contextlib.contextmanager
+    def transaction(self):
+        """Group many mutating calls into one atomic commit (archive
+        import): inside the block the per-call commits become no-ops; the
+        lock is held throughout, and an exception rolls everything back."""
+        with self._lock:
+            if getattr(self._local, "in_txn", False):
+                yield  # nested: the outermost frame owns the commit
+                return
+            self._local.in_txn = True
+            try:
+                yield
+            except BaseException:
+                self._conn().rollback()
+                raise
+            else:
+                self._conn().commit()
+            finally:
+                self._local.in_txn = False
+
+    def _commit(self) -> None:
+        if not getattr(self._local, "in_txn", False):
+            self._conn().commit()
+
     # -- node creation -----------------------------------------------------------
     def store_data(self, value: "DataValue", label: str = "") -> "DataValue":
         """Persist a DataValue; idempotent if already stored."""
@@ -147,7 +173,7 @@ class ProvenanceStore:
                 " mtime) VALUES (?,?,?,?,?,?)",
                 (u, NodeType.DATA.value, label,
                  json.dumps(value.to_payload()), now, now))
-            self._conn().commit()
+            self._commit()
         value.pk = cur.lastrowid
         value.uuid = u
         return value
@@ -166,7 +192,7 @@ class ProvenanceStore:
                 (u, node_type.value, process_type, label, description,
                  json.dumps(attributes or {}), "created", node_hash, now,
                  now))
-            self._conn().commit()
+            self._commit()
         return cur.lastrowid
 
     # -- node updates ----------------------------------------------------------
@@ -212,7 +238,7 @@ class ProvenanceStore:
                         (json.dumps(merged), pk))
             self._conn().execute(
                 f"UPDATE nodes SET {', '.join(sets)} WHERE pk=?", vals)
-            self._conn().commit()
+            self._commit()
 
     # -- store-level counters/metadata (telemetry, e.g. hash collisions) -------
     def incr_meta(self, key: str, by: int = 1) -> int:
@@ -224,7 +250,7 @@ class ProvenanceStore:
                 " ON CONFLICT(key) DO UPDATE SET"
                 " value = CAST(CAST(value AS INTEGER) + ? AS TEXT)",
                 (key, str(by), by))
-            self._conn().commit()
+            self._commit()
             row = self._conn().execute(
                 "SELECT value FROM meta WHERE key=?", (key,)).fetchone()
         return int(row["value"])
@@ -245,14 +271,14 @@ class ProvenanceStore:
             self._conn().execute(
                 "UPDATE nodes SET node_hash=?, mtime=? WHERE pk=?",
                 (node_hash, time.time(), pk))
-            self._conn().commit()
+            self._commit()
 
     def save_checkpoint(self, pk: int, checkpoint: dict) -> None:
         with self._lock:
             self._conn().execute(
                 "UPDATE nodes SET checkpoint=?, mtime=? WHERE pk=?",
                 (json.dumps(checkpoint), time.time(), pk))
-            self._conn().commit()
+            self._commit()
 
     def load_checkpoint(self, pk: int) -> dict | None:
         row = self._conn().execute(
@@ -265,7 +291,35 @@ class ProvenanceStore:
         with self._lock:
             self._conn().execute(
                 "UPDATE nodes SET checkpoint=NULL WHERE pk=?", (pk,))
-            self._conn().commit()
+            self._commit()
+
+    # -- bulk insertion (archive import) ---------------------------------------
+    def insert_node_row(self, record: dict) -> int:
+        """Insert a complete node row (archive import path): the caller
+        supplies the uuid and timestamps, so identity and history survive
+        the trip between profiles. Returns the assigned pk."""
+        with self._lock:
+            cur = self._conn().execute(
+                "INSERT INTO nodes (uuid, node_type, process_type, label,"
+                " description, attributes, payload, process_state,"
+                " exit_status, exit_message, node_hash, ctime, mtime)"
+                " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?)",
+                (record["uuid"], record["node_type"],
+                 record.get("process_type"), record.get("label", ""),
+                 record.get("description", ""),
+                 json.dumps(record.get("attributes") or {}),
+                 record.get("payload"), record.get("process_state"),
+                 record.get("exit_status"), record.get("exit_message"),
+                 record.get("node_hash"),
+                 record.get("ctime", time.time()),
+                 record.get("mtime", time.time())))
+            self._commit()
+        return cur.lastrowid
+
+    def get_node_by_uuid(self, uuid: str) -> dict | None:
+        row = self._conn().execute(
+            "SELECT * FROM nodes WHERE uuid=?", (uuid,)).fetchone()
+        return dict(row) if row else None
 
     # -- links -------------------------------------------------------------------
     def add_link(self, in_pk: int, out_pk: int, link_type: LinkType,
@@ -274,7 +328,15 @@ class ProvenanceStore:
             self._conn().execute(
                 "INSERT INTO links (in_id, out_id, link_type, label)"
                 " VALUES (?,?,?,?)", (in_pk, out_pk, link_type.value, label))
-            self._conn().commit()
+            self._commit()
+
+    def has_link(self, in_pk: int, out_pk: int, link_type: LinkType,
+                 label: str) -> bool:
+        row = self._conn().execute(
+            "SELECT 1 FROM links WHERE in_id=? AND out_id=? AND link_type=?"
+            " AND label=? LIMIT 1",
+            (in_pk, out_pk, link_type.value, label)).fetchone()
+        return row is not None
 
     def delete_outgoing_links(self, in_pk: int,
                               link_types: Iterable[LinkType]) -> None:
@@ -285,15 +347,20 @@ class ProvenanceStore:
             self._conn().execute(
                 f"DELETE FROM links WHERE in_id=? AND link_type IN ({marks})",
                 [in_pk, *types])
-            self._conn().commit()
+            self._commit()
 
     # -- logs ----------------------------------------------------------------------
-    def add_log(self, node_pk: int, levelname: str, message: str) -> None:
+    def add_log(self, node_pk: int, levelname: str, message: str,
+                ts: float | None = None) -> None:
+        """Attach a log record; ``ts`` overrides the wall clock so imported
+        logs keep their original emission time."""
         with self._lock:
             self._conn().execute(
                 "INSERT INTO logs (node_id, levelname, message, time)"
-                " VALUES (?,?,?,?)", (node_pk, levelname, message, time.time()))
-            self._conn().commit()
+                " VALUES (?,?,?,?)",
+                (node_pk, levelname, message,
+                 time.time() if ts is None else ts))
+            self._commit()
 
     def get_logs(self, node_pk: int) -> list[dict]:
         rows = self._conn().execute(
@@ -370,6 +437,21 @@ class QueryBuilder:
             t = node_type.value if isinstance(node_type, NodeType) else node_type
             self._wheres.append("node_type LIKE ?")
             self._args.append(f"{t}%")
+        return self
+
+    def with_node_types(self, node_types: Iterable[NodeType | str]
+                        ) -> "QueryBuilder":
+        """Exact node-type membership (no prefix matching)."""
+        types = [t.value if isinstance(t, NodeType) else t
+                 for t in node_types]
+        marks = ",".join("?" * len(types))
+        self._wheres.append(f"node_type IN ({marks})")
+        self._args.extend(types)
+        return self
+
+    def with_null_hash(self) -> "QueryBuilder":
+        """Nodes with no input fingerprint (legacy / invalidated)."""
+        self._wheres.append("node_hash IS NULL")
         return self
 
     def with_process_type(self, process_type: str) -> "QueryBuilder":
