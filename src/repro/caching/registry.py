@@ -59,6 +59,7 @@ class CacheRegistry:
                 .with_exit_status(0)
                 .order_by("pk", desc=True)
                 .limit(2 + self._COLLISION_PROBE)
+                .project("pk", "uuid", "exit_status", "exit_message")
                 .all())
         viable = [row for row in rows
                   if exclude_pk is None or row["pk"] != exclude_pk]
@@ -98,7 +99,8 @@ class CacheRegistry:
         their source via the attribute carry-over, which is sound because
         their outputs are content-identical by construction."""
         attrs = json.loads(
-            (self.store.get_node(pk) or {}).get("attributes") or "{}")
+            (self.store.get_node(pk, columns=("attributes",)) or {})
+            .get("attributes") or "{}")
         cached = attrs.get("output_digest")
         if cached:
             return cached
@@ -164,7 +166,7 @@ class CacheRegistry:
         if not node or not node.get("node_hash"):
             return []
         rows = (QueryBuilder(self.store)
-                .with_hash(node["node_hash"]).all())
+                .with_hash(node["node_hash"]).project("pk").all())
         return [r["pk"] for r in rows if r["pk"] != pk]
 
     # -- invalidation --------------------------------------------------------

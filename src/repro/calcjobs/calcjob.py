@@ -156,7 +156,7 @@ class CalcJob(Process):
                 self.report("uploaded %d files to %s", len(info.files),
                             self.hostname)
                 self._stage = SUBMIT
-                self.store.save_checkpoint(self.pk, self.get_checkpoint())
+                self.checkpoint_now()
 
             elif self._stage == SUBMIT:
                 async def submit():
@@ -166,7 +166,7 @@ class CalcJob(Process):
                 self._job_id = await self._with_backoff(submit, "submit")
                 self.report("submitted as job %s", self._job_id)
                 self._stage = UPDATE
-                self.store.save_checkpoint(self.pk, self.get_checkpoint())
+                self.checkpoint_now()
 
             elif self._stage == UPDATE:
                 async def update():
@@ -178,7 +178,7 @@ class CalcJob(Process):
                 if state in (JobState.DONE.value, JobState.FAILED.value):
                     self._scheduler_state = state
                     self._stage = RETRIEVE
-                    self.store.save_checkpoint(self.pk, self.get_checkpoint())
+                    self.checkpoint_now()
                 elif state == JobState.UNDETERMINED.value:
                     # Lost-job mitigation: after a node failure the scheduler
                     # may have no record of our id (e.g. this process was
@@ -190,8 +190,7 @@ class CalcJob(Process):
                                     self._job_id)
                         self._undetermined = 0
                         self._stage = UPLOAD
-                        self.store.save_checkpoint(self.pk,
-                                                   self.get_checkpoint())
+                        self.checkpoint_now()
                     else:
                         import asyncio
                         await self.interruptible(asyncio.sleep(0.05))

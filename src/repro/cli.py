@@ -52,7 +52,9 @@ def _fmt_age(ts: float) -> str:
 
 
 def cmd_process_list(store: ProvenanceStore, args) -> None:
-    qb = QueryBuilder(store).nodes("process").order_by("pk", desc=True)
+    qb = (QueryBuilder(store).nodes("process").order_by("pk", desc=True)
+          .project("pk", "ctime", "process_type", "process_state",
+                   "exit_status", "label"))
     if args.state:
         qb = qb.with_state(args.state)
     rows = qb.limit(args.limit).all()

@@ -117,6 +117,14 @@ class Process(StateMachine):
         self._play.set()
         self._interrupts: list[asyncio.Future] = []
         self._pause_requested = False
+        # write coalescing (unit of work): state/attribute updates and
+        # checkpoint writes buffer here and flush in ONE store transaction
+        # at the next flush boundary (pause point, interruptible await,
+        # long-lived state, termination) — ~2 commits per process instead
+        # of one commit per store call
+        self._pending_update: dict | None = None
+        self._ckpt_dirty = False
+        self._last_ckpt_json: str | None = None
 
         # input fingerprint — computed for every cacheable type regardless
         # of the current policy (so any later run can reuse this node);
@@ -131,50 +139,59 @@ class Process(StateMachine):
         except Exception:  # noqa: BLE001 — hashing must never block creation
             pass
 
-        # provenance node + input links
-        self.pk = self.store.create_process_node(
-            self.NODE_TYPE, process_type=type(self).__name__,
-            label=self.metadata.get("label", ""),
-            description=self.metadata.get("description", ""),
-            node_hash=self._input_hash)
-        self._link_inputs(spec.inputs, merged, prefix="")
-
+        # provenance node + input links + initial checkpoint, atomically:
+        # one commit for the whole creation instead of one per input
         parent = CURRENT_PROCESS.get()
         if parent_pk is None and parent is not None:
             parent_pk = parent.pk
-        if parent_pk is not None:
-            self.store.add_link(parent_pk, self.pk,
-                                _CALL_LINK[self.NODE_TYPE],
-                                f"CALL_{self.pk}")
-        self.parent_pk = parent_pk
-        # initial checkpoint: a freshly-created process can be shipped to a
-        # daemon worker (task queue carries only the pk; paper §III.C.a)
-        try:
-            self.store.save_checkpoint(self.pk, self.get_checkpoint())
-        except Exception:  # noqa: BLE001
-            pass
+        with self.store.transaction():
+            self.pk = self.store.create_process_node(
+                self.NODE_TYPE, process_type=type(self).__name__,
+                label=self.metadata.get("label", ""),
+                description=self.metadata.get("description", ""),
+                node_hash=self._input_hash)
+            self._link_inputs(spec.inputs, merged, prefix="")
+            if parent_pk is not None:
+                self.store.add_link(parent_pk, self.pk,
+                                    _CALL_LINK[self.NODE_TYPE],
+                                    f"CALL_{self.pk}")
+            self.parent_pk = parent_pk
+            # initial checkpoint: a freshly-created process can be shipped
+            # to a daemon worker (task queue carries only the pk; §III.C.a)
+            try:
+                self._write_checkpoint()
+            except Exception:  # noqa: BLE001
+                pass
 
     def _link_inputs(self, ns: PortNamespace, values: Mapping[str, Any],
                      prefix: str) -> None:
+        pairs: list[tuple[DataValue, str]] = []
+        self._collect_input_links(ns, values, prefix, pairs)
+        if not pairs:
+            return
         link_type = _INPUT_LINK[self.NODE_TYPE]
+        self.store.store_data_many([dv for dv, _label in pairs])
+        self.store.add_links([(dv.pk, self.pk, link_type, label)
+                              for dv, label in pairs])
+
+    def _collect_input_links(self, ns: PortNamespace,
+                             values: Mapping[str, Any], prefix: str,
+                             pairs: list[tuple[DataValue, str]]) -> None:
         for key, value in values.items():
             port = ns.get(key)
             label = f"{prefix}{key}"
             if port is not None and port.non_db:
                 continue
             if isinstance(port, PortNamespace) and isinstance(value, Mapping):
-                self._link_inputs(port, value, prefix=f"{label}__")
+                self._collect_input_links(port, value, f"{label}__", pairs)
                 continue
             if isinstance(value, DataValue):
-                self.store.store_data(value)
-                self.store.add_link(value.pk, self.pk, link_type, label)
+                pairs.append((value, label))
             elif isinstance(value, Mapping) and (
                     port is None or getattr(port, "dynamic", False)):
                 for k2, v2 in value.items():
                     if isinstance(v2, DataValue):
-                        self.store.store_data(v2)
-                        self.store.add_link(v2.pk, self.pk, link_type,
-                                            f"{label}__{k2}")
+                        pairs.append((v2, f"{label}__{k2}"))
 
     # -- identity ------------------------------------------------------------------
     @property
@@ -208,53 +225,118 @@ class Process(StateMachine):
         self.outputs[label] = value
 
     def _commit_outputs(self) -> str | None:
-        """Validate + store outputs, link them. Returns error or None."""
+        """Validate + store outputs, link them (bulk). Returns error or
+        None."""
         err = self.spec().validate_outputs(self.outputs)
         if err is not None:
             return err
         link_type = _OUTPUT_LINK[self.NODE_TYPE]
+        pairs: list[tuple[DataValue, str]] = []
         for label, value in self.outputs.items():
             if isinstance(value, Mapping) and not isinstance(value, DataValue):
                 for k2, v2 in value.items():
-                    dv = to_data_value(v2)
-                    self.store.store_data(dv)
-                    self.store.add_link(self.pk, dv.pk, link_type,
-                                        f"{label}__{k2}")
+                    pairs.append((to_data_value(v2), f"{label}__{k2}"))
                 continue
-            dv = to_data_value(value)
-            self.store.store_data(dv)
-            self.store.add_link(self.pk, dv.pk, link_type, label)
+            pairs.append((to_data_value(value), label))
+        if pairs:
+            self.store.store_data_many([dv for dv, _label in pairs])
+            self.store.add_links([(self.pk, dv.pk, link_type, label)
+                                  for dv, label in pairs])
         return None
+
+    # -- provenance write coalescing (unit of work) ---------------------------
+    def _merge_pending(self, update: dict) -> None:
+        if self._pending_update is None:
+            self._pending_update = dict(update)
+            return
+        attrs = dict(self._pending_update.get("attributes") or {})
+        attrs.update(update.get("attributes") or {})
+        self._pending_update.update(update)
+        self._pending_update["attributes"] = attrs
+
+    def stash_attributes(self, attrs: dict) -> None:
+        """Record node attributes without an immediate commit; they land
+        with the step's transaction at the next flush boundary."""
+        self._merge_pending({"attributes": dict(attrs)})
+
+    def _write_checkpoint(self) -> None:
+        """Serialize + persist the checkpoint, skipping the write when it
+        is byte-identical to the last one (the dirty check)."""
+        js = json.dumps(self.get_checkpoint())
+        if js != self._last_ckpt_json:
+            self.store.save_checkpoint(self.pk, js)
+            self._last_ckpt_json = js
+
+    def _flush_provenance(self) -> None:
+        """Write buffered state updates + the checkpoint in one store
+        transaction. Called at every suspension point the engine controls,
+        so durability is guaranteed before the process can lose the CPU."""
+        if self._pending_update is None and not self._ckpt_dirty:
+            return
+        with self.store.transaction():
+            if self._pending_update is not None:
+                update, self._pending_update = self._pending_update, None
+                self.store.update_process(self.pk, **update)
+            if self._ckpt_dirty and not self.state.is_terminal:
+                try:
+                    self._write_checkpoint()
+                except Exception:  # noqa: BLE001 — must not kill the run
+                    self.runner.logger.exception(
+                        "checkpoint failed for %d", self.pk)
+        self._ckpt_dirty = False
+
+    def checkpoint_now(self) -> None:
+        """Force a durable checkpoint immediately (stage boundaries in
+        CalcJob), folded into one transaction with any buffered update."""
+        self._ckpt_dirty = True
+        self._flush_provenance()
 
     # -- state machine hooks -------------------------------------------------------------
     def on_entered(self, from_state: ProcessState) -> None:
         state = self.state
-        attrs = {"paused": state is ProcessState.PAUSED}
-        self.store.update_process(
-            self.pk, state=state.value,
-            exit_status=(self._exit_code.status if self._exit_code else None),
-            exit_message=(self._exit_code.message if self._exit_code else None),
-            attributes=attrs)
-        if not state.is_terminal:
-            try:
-                self.store.save_checkpoint(self.pk, self.get_checkpoint())
-            except Exception:  # noqa: BLE001 — checkpointing must not kill
-                self.runner.logger.exception("checkpoint failed for %d", self.pk)
-        else:
-            self.store.delete_checkpoint(self.pk)
+        self._merge_pending({
+            "state": state.value,
+            "exit_status": (self._exit_code.status
+                            if self._exit_code else None),
+            "exit_message": (self._exit_code.message
+                             if self._exit_code else None),
+            "attributes": {"paused": state is ProcessState.PAUSED}})
+        if state.is_terminal:
+            # the terminal write is one transaction: final state +
+            # buffered attributes + checkpoint removal (joins the caller's
+            # step transaction when there is one)
+            with self.store.transaction():
+                update, self._pending_update = self._pending_update, None
+                self.store.update_process(self.pk, **update)
+                self.store.delete_checkpoint(self.pk)
+            self._ckpt_dirty = False
             self._done.set()
+        elif state is ProcessState.RUNNING:
+            # short transit state: coalesce into the step's transaction at
+            # the next flush boundary (pause point / interruptible await /
+            # terminal transition)
+            self._ckpt_dirty = True
+        else:
+            # WAITING / PAUSED are long-lived and externally observable:
+            # make them (and their checkpoint) durable right away
+            self._ckpt_dirty = True
+            self._flush_provenance()
         comm = getattr(self.runner, "communicator", None)
         if comm is not None:
             from repro.engine.communicator import state_subject
-            comm.broadcast_send(
+            body = {"pk": self.pk,
+                    "from": from_state.value,
+                    "state": state.value,
+                    "exit_status": (self._exit_code.status
+                                    if self._exit_code else None),
+                    "ts": time.time()}
+            # never broadcast ahead of durability: a waiter in another OS
+            # process reads the store the moment this lands — when the
+            # terminal transition sits inside a step transaction, the
+            # broadcast is deferred until that transaction commits
+            self.store.after_commit(lambda: comm.broadcast_send(
                 subject=state_subject(self.pk, state.value),
-                sender=self.pk,
-                body={"pk": self.pk,
-                      "from": from_state.value,
-                      "state": state.value,
-                      "exit_status": (self._exit_code.status
-                                      if self._exit_code else None),
-                      "ts": time.time()})
+                sender=self.pk, body=body))
 
     # -- checkpointing (paper §III.B.1, fig. 7) ---------------------------------------------
     def get_checkpoint(self) -> dict:
@@ -290,7 +372,7 @@ class Process(StateMachine):
         from repro.engine.runner import default_runner
         self.runner = runner or default_runner()
         self.store = self.runner.store
-        self.inputs = _deserialize_inputs(checkpoint["inputs"])
+        self.inputs = _deserialize_inputs(checkpoint["inputs"], self.store)
         self.metadata = dict(self.inputs.get("metadata") or {})
         self.outputs = {}
         self._exit_code = None
@@ -300,9 +382,12 @@ class Process(StateMachine):
         self._play.set()
         self._interrupts = []
         self._pause_requested = False
+        self._pending_update = None
+        self._ckpt_dirty = False
+        self._last_ckpt_json = None
         self.pk = checkpoint["pk"]
         self.parent_pk = checkpoint.get("parent_pk")
-        node = self.store.get_node(self.pk) or {}
+        node = self.store.get_node(self.pk, columns=("node_hash",)) or {}
         self._input_hash = node.get("node_hash")
         self.load_checkpoint_extras(checkpoint.get("extras", {}))
         return self
@@ -356,7 +441,8 @@ class Process(StateMachine):
         """A kill recorded in the store by a control client — honoured on
         (re)start so a kill survives worker crashes and restarts."""
         try:
-            node = self.store.get_node(self.pk) or {}
+            node = self.store.get_node(self.pk,
+                                       columns=("attributes",)) or {}
             attrs = json.loads(node.get("attributes") or "{}")
             return attrs.get("kill_requested")
         except Exception:  # noqa: BLE001
@@ -389,6 +475,7 @@ class Process(StateMachine):
         routable) still lands at the next step boundary rather than only
         after a worker restart. Local runs skip the per-step store read —
         their control RPCs arrive in-memory."""
+        self._flush_provenance()
         if self._killed_msg is None and \
                 getattr(self.runner, "distributed", False):
             self._killed_msg = self._kill_requested_durably()
@@ -402,7 +489,10 @@ class Process(StateMachine):
             # resume_from_pause() happened in play()
 
     async def interruptible(self, coro_or_future):
-        """Await something, but let kill() break in."""
+        """Await something, but let kill() break in. Buffered provenance
+        writes flush first — this coroutine is about to lose the CPU for
+        an unbounded time, so its state must be durable."""
+        self._flush_provenance()
         loop = asyncio.get_running_loop()
         interrupt = loop.create_future()
         self._interrupts.append(interrupt)
@@ -447,43 +537,47 @@ class Process(StateMachine):
                            self.store.load_data(data_pk).to_payload()))
                       for label, link_type, data_pk in hit.outputs]
             src_attrs = json.loads(
-                (self.store.get_node(hit.pk) or {}).get("attributes")
-                or "{}")
+                (self.store.get_node(hit.pk, columns=("attributes",)) or {})
+                .get("attributes") or "{}")
         except Exception:  # noqa: BLE001 — a broken cache must not break runs
             self.store.add_log(self.pk, "WARNING",
                                "cache lookup failed:\n" +
                                traceback.format_exc())
             return None
         try:
-            # phase 2: commit the clones
+            # phase 2: commit the clones — one transaction, bulk writes
             out_ports = self.spec().outputs
-            for label, link_type, clone in clones:
-                self.store.store_data(clone)
-                self.store.add_link(self.pk, clone.pk, LinkType(link_type),
-                                    label)
-                # re-nest '<port>__<key>' labels, but only when the prefix
-                # is a declared output port — a flat label that merely
-                # contains '__' stays flat, matching the cold-run shape
-                ns_label, sep, sub = label.partition("__")
-                if sep and out_ports.get(label) is None and \
-                        out_ports.get(ns_label) is not None:
-                    self.outputs.setdefault(ns_label, {})[sub] = clone
-                else:
-                    self.outputs[label] = clone
-            # honest provenance: carry over the source's attributes and
-            # advertise what this node was cloned from
-            attrs = {k: v for k, v in src_attrs.items()
-                     if k not in ("paused", "cached_from", "cached_from_pk",
-                                  "kill_requested")}
-            attrs.update(cached_from=hit.uuid, cached_from_pk=hit.pk)
-            self.store.update_process(self.pk, attributes=attrs)
-            self.report("cache hit: cloned %d output(s) from %s<%d>",
-                        len(hit.outputs), type(self).__name__, hit.pk)
+            with self.store.transaction():
+                self.store.store_data_many(
+                    [clone for _l, _lt, clone in clones])
+                self.store.add_links(
+                    [(self.pk, clone.pk, LinkType(link_type), label)
+                     for label, link_type, clone in clones])
+                for label, _link_type, clone in clones:
+                    # re-nest '<port>__<key>' labels, but only when the
+                    # prefix is a declared output port — a flat label that
+                    # merely contains '__' stays flat, matching the
+                    # cold-run shape
+                    ns_label, sep, sub = label.partition("__")
+                    if sep and out_ports.get(label) is None and \
+                            out_ports.get(ns_label) is not None:
+                        self.outputs.setdefault(ns_label, {})[sub] = clone
+                    else:
+                        self.outputs[label] = clone
+                # honest provenance: carry over the source's attributes
+                # and advertise what this node was cloned from
+                attrs = {k: v for k, v in src_attrs.items()
+                         if k not in ("paused", "cached_from",
+                                      "cached_from_pk", "kill_requested")}
+                attrs.update(cached_from=hit.uuid, cached_from_pk=hit.pk)
+                self.store.update_process(self.pk, attributes=attrs)
+                self.report("cache hit: cloned %d output(s) from %s<%d>",
+                            len(hit.outputs), type(self).__name__, hit.pk)
             return ExitCode(hit.exit_status, hit.exit_message or "",
                             "SUCCESS")
-        except Exception:  # noqa: BLE001 — roll back so run() starts clean
-            self.store.delete_outgoing_links(
-                self.pk, (LinkType.CREATE, LinkType.RETURN))
+        except Exception:  # noqa: BLE001 — txn already rolled the clones
+            # back (links, nodes, attribute writes); only the in-memory
+            # output dict needs clearing before run() starts clean
             self.outputs.clear()
             self.store.add_log(self.pk, "WARNING",
                                "cache clone failed; recomputing:\n" +
@@ -507,15 +601,22 @@ class Process(StateMachine):
             if exit_code is None:
                 result = await self.run()
                 exit_code = _interpret_result(result)
-                if exit_code.is_finished_ok:
-                    err = self._commit_outputs()
-                    if err is not None:
-                        exit_code = ExitCode(
-                            11, f"output validation failed: {err}",
-                            "ERROR_INVALID_OUTPUTS")
-            self._exit_code = exit_code
-            if not self.is_terminated:
-                self.transition_to(ProcessState.FINISHED)
+                # the terminal step is one unit of work: output storing +
+                # links + final state + checkpoint removal, one commit
+                with self.store.transaction():
+                    if exit_code.is_finished_ok:
+                        err = self._commit_outputs()
+                        if err is not None:
+                            exit_code = ExitCode(
+                                11, f"output validation failed: {err}",
+                                "ERROR_INVALID_OUTPUTS")
+                    self._exit_code = exit_code
+                    if not self.is_terminated:
+                        self.transition_to(ProcessState.FINISHED)
+            else:
+                self._exit_code = exit_code
+                if not self.is_terminated:
+                    self.transition_to(ProcessState.FINISHED)
         except ProcessKilled as exc:
             self._exit_code = ExitCode(998, str(exc), "KILLED")
             if not self.is_terminated:
@@ -566,7 +667,13 @@ def _serialize_inputs(ns: PortNamespace, values: Mapping[str, Any]) -> dict:
     for key, value in values.items():
         port = ns.get(key) if ns is not None else None
         if isinstance(value, DataValue):
-            out[key] = {"__data__": value.to_payload(), "pk": value.pk}
+            if value.is_stored:
+                # stored values serialize by reference: checkpoints stop
+                # embedding (potentially huge) payload copies — the store
+                # (shared by every worker on this profile) rehydrates them
+                out[key] = {"__data_ref__": value.pk}
+            else:
+                out[key] = {"__data__": value.to_payload(), "pk": value.pk}
         elif isinstance(value, Mapping):
             sub_ns = port if isinstance(port, PortNamespace) else None
             out[key] = {"__ns__": _serialize_inputs(sub_ns, value)}
@@ -577,15 +684,17 @@ def _serialize_inputs(ns: PortNamespace, values: Mapping[str, Any]) -> dict:
     return out
 
 
-def _deserialize_inputs(payload: dict) -> dict[str, Any]:
+def _deserialize_inputs(payload: dict, store) -> dict[str, Any]:
     out: dict[str, Any] = {}
     for key, entry in payload.items():
-        if "__data__" in entry:
+        if "__data_ref__" in entry:
+            out[key] = store.load_data(entry["__data_ref__"])
+        elif "__data__" in entry:
             dv = DataValue.from_payload(entry["__data__"])
             dv.pk = entry.get("pk")
             out[key] = dv
         elif "__ns__" in entry:
-            out[key] = _deserialize_inputs(entry["__ns__"])
+            out[key] = _deserialize_inputs(entry["__ns__"], store)
         elif "__raw__" in entry:
             out[key] = entry["__raw__"]
         else:

@@ -68,9 +68,9 @@ def _make_function_process(fn: Callable, node_type: NodeType) -> type:
                     for k, v in result.items():
                         self.out(k, to_data_value(v))
                     # so a cache hit can reproduce the dict-shaped return
-                    # even when the dict has a single 'result' key
-                    self.store.update_process(self.pk,
-                                              attributes={"returns_dict": True})
+                    # even when the dict has a single 'result' key; stashed
+                    # so it commits with the terminal transaction
+                    self.stash_attributes({"returns_dict": True})
                 else:
                     self.out("result", to_data_value(result))
             self._result_value = result

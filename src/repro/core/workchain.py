@@ -52,7 +52,8 @@ class ProcessNodeView:
 
     @property
     def _node(self) -> dict:
-        return self._store.get_node(self.pk) or {}
+        from repro.provenance.store import SUMMARY_COLUMNS
+        return self._store.get_node(self.pk, columns=SUMMARY_COLUMNS) or {}
 
     @property
     def process_state(self) -> str:
@@ -400,8 +401,10 @@ class WorkChain(Process):
                 if not self.is_terminated:
                     self.transition_to(ProcessState.RUNNING)
             else:
-                # checkpoint between steps (engine guarantee, §II.B.3)
-                self.store.save_checkpoint(self.pk, self.get_checkpoint())
+                # checkpoint between steps (engine guarantee, §II.B.3):
+                # marked dirty here, flushed in ONE transaction at the
+                # pause point above — always before the next step runs
+                self._ckpt_dirty = True
             if finished:
                 return None
 
@@ -450,6 +453,9 @@ def _serialize_ctx(ctx: Mapping[str, Any]) -> dict:
     for k, v in ctx.items():
         if isinstance(v, ProcessNodeView):
             out[k] = {"__node__": v.pk}
+        elif isinstance(v, DataValue) and v.is_stored:
+            # by reference: per-step checkpoints stop copying payloads
+            out[k] = {"__data_ref__": v.pk}
         elif isinstance(v, DataValue):
             out[k] = {"__data__": v.to_payload(), "pk": v.pk}
         elif isinstance(v, list) and all(
@@ -469,6 +475,8 @@ def _deserialize_ctx(payload: dict, store) -> AttributeDict:
             ctx[k] = ProcessNodeView(store, entry["__node__"])
         elif "__nodes__" in entry:
             ctx[k] = [ProcessNodeView(store, pk) for pk in entry["__nodes__"]]
+        elif "__data_ref__" in entry:
+            ctx[k] = store.load_data(entry["__data_ref__"])
         elif "__data__" in entry:
             dv = DataValue.from_payload(entry["__data__"])
             dv.pk = entry.get("pk")

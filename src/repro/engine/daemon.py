@@ -20,6 +20,7 @@ import time
 from typing import Any
 
 from repro.engine.runner import TERMINAL
+from repro.provenance.store import SUMMARY_COLUMNS
 
 logger = logging.getLogger("repro.engine.daemon")
 
@@ -42,7 +43,7 @@ def make_process_task_handler(runner, store, owned: set | None = None):
         pk = payload["pk"]
         checkpoint = store.load_checkpoint(pk)
         if checkpoint is None:
-            node = store.get_node(pk)
+            node = store.get_node(pk, columns=SUMMARY_COLUMNS)
             if node and node.get("process_state") in TERMINAL:
                 return  # duplicate delivery of a finished process
             raise RuntimeError(f"no checkpoint for process {pk}")

@@ -18,7 +18,9 @@ from repro.engine.communicator import (
     LocalCommunicator, parse_state_subject, process_rpc_id,
 )
 from repro.core.statemachine import TERMINAL_STATES
-from repro.provenance.store import ProvenanceStore, current_store
+from repro.provenance.store import (
+    SUMMARY_COLUMNS, ProvenanceStore, current_store,
+)
 
 # derived from the canonical state-machine set — the single source of truth
 TERMINAL = tuple(s.value for s in TERMINAL_STATES)
@@ -192,7 +194,7 @@ class Runner:
         token = self.communicator.add_broadcast_subscriber(
             on_broadcast, subject_filter=f"state_changed.{pk}.*")
         try:
-            node = self.store.get_node(pk)
+            node = self.store.get_node(pk, columns=SUMMARY_COLUMNS)
             if node and node.get("process_state") in TERMINAL:
                 return
             while True:
@@ -201,7 +203,7 @@ class Runner:
                                            timeout=self.liveness_interval)
                     return
                 except asyncio.TimeoutError:
-                    node = self.store.get_node(pk)
+                    node = self.store.get_node(pk, columns=SUMMARY_COLUMNS)
                     if node and node.get("process_state") in TERMINAL:
                         return
         finally:
@@ -216,7 +218,7 @@ class Runner:
         terminal state; returns its final node row."""
         pk = self._target_pk(target)
         await self.wait_for_process(pk)
-        return self.store.get_node(pk)
+        return self.store.get_node(pk, columns=SUMMARY_COLUMNS)
 
     async def wait_all(self, targets: Iterable) -> list[dict | None]:
         """Wait for many processes concurrently (one broadcast

@@ -56,6 +56,12 @@ class ArchiveError(RuntimeError):
 # graph traversal
 # ---------------------------------------------------------------------------
 
+#: below this many total links the traversal preloads the whole link table
+#: (two projected scans) and walks in memory — killing the per-level query
+#: cost entirely; deep chains would otherwise still pay one query per level
+_CLOSURE_PRELOAD_MAX_LINKS = 500_000
+
+
 def compute_closure(store: ProvenanceStore, pks: Iterable[int], *,
                     ancestors: bool = True,
                     descendants: bool = True) -> set[int]:
@@ -74,29 +80,102 @@ def compute_closure(store: ProvenanceStore, pks: Iterable[int], *,
       (outgoing ``CALL_*``). Outgoing ``INPUT_*`` links from data nodes
       are deliberately *not* followed: that would drag in every unrelated
       calculation that ever consumed a shared input.
+
+    The walk is batched: small/medium graphs preload links + process-pk
+    membership in two projected scans (no payload text is ever fetched),
+    larger ones expand one BFS *level* per ``links_for``/``get_nodes``
+    round trip instead of three queries per node.
     """
+    seeds = {int(pk) for pk in pks}
+    if not seeds:
+        return set()
+    found = store.get_nodes(seeds, columns=("pk",))
+    missing = seeds - found.keys()
+    if missing:
+        raise KeyError(f"no node with pk={min(missing)}")
+
+    if store.count_links() <= _CLOSURE_PRELOAD_MAX_LINKS:
+        return _closure_preloaded(store, seeds, ancestors, descendants)
+    return _closure_levelwise(store, seeds, ancestors, descendants)
+
+
+def _expand(pk: int, is_process: bool,
+            incoming: list[tuple[int, str]], outgoing: list[tuple[int, str]],
+            ancestors: bool, descendants: bool) -> Iterable[int]:
+    """Apply the traversal rules to one node's edge lists."""
+    for src, lt in incoming:
+        if is_process and lt in _INPUT_LINKS:
+            yield src                                   # always: closure
+        elif ancestors and not is_process and lt in _OUTPUT_LINKS:
+            yield src                                   # creator
+        elif ancestors and is_process and lt in _CALL_LINKS:
+            yield src                                   # caller
+    if descendants and is_process:
+        for dst, lt in outgoing:
+            if lt in _OUTPUT_LINKS or lt in _CALL_LINKS:
+                yield dst
+
+
+def _closure_preloaded(store: ProvenanceStore, seeds: set[int],
+                       ancestors: bool, descendants: bool) -> set[int]:
+    # raw-tuple cursor: this loop touches every link row, so Row-object
+    # construction would dominate the traversal
+    cur = store._conn().cursor()
+    cur.row_factory = None
+    cur.execute("SELECT pk FROM nodes WHERE node_type LIKE 'process%'")
+    process_pks = {pk for (pk,) in cur.fetchall()}
+    # bake the traversal rules into the adjacency at load time: one pass
+    # categorizes every link, leaving a pure integer-graph BFS
+    follow: dict[int, list[int]] = {}
+    cur.execute("SELECT in_id, out_id, link_type FROM links")
+    for in_id, out_id, lt in cur.fetchall():
+        if lt in _INPUT_LINKS:
+            if out_id in process_pks:
+                follow.setdefault(out_id, []).append(in_id)   # always
+        elif lt in _OUTPUT_LINKS:
+            if ancestors and out_id not in process_pks:
+                follow.setdefault(out_id, []).append(in_id)   # creator
+            if descendants and in_id in process_pks:
+                follow.setdefault(in_id, []).append(out_id)   # created
+        elif lt in _CALL_LINKS:
+            if ancestors and out_id in process_pks:
+                follow.setdefault(out_id, []).append(in_id)   # caller
+            if descendants and in_id in process_pks:
+                follow.setdefault(in_id, []).append(out_id)   # callee
     seen: set[int] = set()
-    frontier = [int(pk) for pk in pks]
+    frontier = list(seeds)
     while frontier:
         pk = frontier.pop()
         if pk in seen:
             continue
-        node = store.get_node(pk)
-        if node is None:
-            raise KeyError(f"no node with pk={pk}")
         seen.add(pk)
-        is_process = node["node_type"].startswith("process")
-        for src, lt, _label in store.incoming(pk):
-            if is_process and lt in _INPUT_LINKS:
-                frontier.append(src)                    # always: closure
-            elif ancestors and not is_process and lt in _OUTPUT_LINKS:
-                frontier.append(src)                    # creator
-            elif ancestors and is_process and lt in _CALL_LINKS:
-                frontier.append(src)                    # caller
-        if descendants and is_process:
-            for dst, lt, _label in store.outgoing(pk):
-                if lt in _OUTPUT_LINKS or lt in _CALL_LINKS:
-                    frontier.append(dst)
+        nxt = follow.get(pk)
+        if nxt:
+            frontier.extend(nxt)
+    return seen
+
+
+def _closure_levelwise(store: ProvenanceStore, seeds: set[int],
+                       ancestors: bool, descendants: bool) -> set[int]:
+    seen: set[int] = set()
+    is_process: dict[int, bool] = {}
+    frontier = set(seeds)
+    while frontier:
+        unknown = [pk for pk in frontier if pk not in is_process]
+        for pk, row in store.get_nodes(unknown,
+                                       columns=("pk", "node_type")).items():
+            is_process[pk] = row["node_type"].startswith("process")
+        inc: dict[int, list[tuple[int, str]]] = {}
+        out: dict[int, list[tuple[int, str]]] = {}
+        for in_id, out_id, lt, _label in store.links_for(frontier):
+            inc.setdefault(out_id, []).append((in_id, lt))
+            out.setdefault(in_id, []).append((out_id, lt))
+        seen |= frontier
+        nxt: set[int] = set()
+        for pk in frontier:
+            nxt.update(_expand(pk, is_process[pk], inc.get(pk, ()),
+                               out.get(pk, ()), ancestors, descendants))
+        frontier = nxt - seen
     return seen
 
 
@@ -109,10 +188,13 @@ _NODE_FIELDS = ("uuid", "node_type", "process_type", "label", "description",
                 "ctime", "mtime")
 
 
-def _node_record(node: dict) -> tuple[dict, bytes | None]:
+def _node_record(store: ProvenanceStore, node: dict
+                 ) -> tuple[dict, bytes | None]:
     """The archive representation of one node row: a pk-free JSON record,
     plus raw ``.npy`` bytes when the payload is an array (stored as a
-    separate zip member referenced by uuid)."""
+    separate zip member referenced by uuid). Repository-backed payloads
+    are resolved here, so the archive format is identical whether the
+    source profile kept the content inline or in its blob store."""
     record = {f: node.get(f) for f in _NODE_FIELDS}
     record["attributes"] = json.loads(node.get("attributes") or "{}")
     # runtime attributes make no sense across profiles, and pks are
@@ -125,9 +207,16 @@ def _node_record(node: dict) -> tuple[dict, bytes | None]:
     npy: bytes | None = None
     if payload is not None:
         doc = json.loads(payload)
-        if doc.get("type") == "array" and "npy_b64" in doc:
+        if doc.get("type") == "array" and "blob" in doc:
+            # blob-backed array: raw bytes straight from the repository
+            npy = store.repository.get(doc["blob"])
+            doc = {"type": "array", "npy_ref": f"payloads/{node['uuid']}.npy"}
+        elif doc.get("type") == "array" and "npy_b64" in doc:
             npy = base64.b64decode(doc["npy_b64"])
             doc = {"type": "array", "npy_ref": f"payloads/{node['uuid']}.npy"}
+        else:
+            # folders (and anything else) travel inline in nodes.jsonl
+            doc = store.materialize_payload(doc)
         record["payload"] = doc
     else:
         record["payload"] = None
@@ -166,11 +255,16 @@ def export_archive(store: ProvenanceStore, path: str,
     node_records: list[dict] = []
     payloads: dict[str, bytes] = {}
     uuid_of: dict[int, str] = {}
+    # batched, one pass; checkpoints never enter an archive, so don't
+    # drag live processes' checkpoint text through the row cache
+    from repro.provenance.store import SUMMARY_COLUMNS
+    rows_by_pk = store.get_nodes(selection,
+                                 columns=(*SUMMARY_COLUMNS, "payload"))
     for pk in sorted(selection):
-        node = store.get_node(pk)
+        node = rows_by_pk.get(pk)
         if node is None:
             raise KeyError(f"no node with pk={pk}")
-        record, npy = _node_record(node)
+        record, npy = _node_record(store, node)
         uuid_of[pk] = node["uuid"]
         node_records.append(record)
         if npy is not None:
@@ -190,8 +284,8 @@ def export_archive(store: ProvenanceStore, path: str,
                                      r["label"]))
 
     log_records: list[dict] = []
-    for pk in sorted(selection):
-        for entry in store.get_logs(pk):
+    for pk, entries in store.logs_for(sorted(selection)).items():
+        for entry in entries:
             log_records.append({"node": uuid_of[pk],
                                 "levelname": entry["levelname"],
                                 "message": entry["message"],
@@ -379,9 +473,10 @@ def import_archive(store: ProvenanceStore, path: str, *,
                     all(p in deduped_uuids for p in partners[r["uuid"]])}
         result.nodes_skipped_orphaned = len(orphaned)
 
-        # pass 2: one atomic merge
+        # pass 2: one atomic merge, bulk inserts (executemany) throughout
         new_uuids: set[str] = set()
         with store.transaction():
+            to_insert: list[dict] = []
             for record in new_records:
                 uuid = record["uuid"]
                 if uuid in orphaned:
@@ -397,14 +492,19 @@ def import_archive(store: ProvenanceStore, path: str, *,
                     payload = {"type": "array",
                                "npy_b64": base64.b64encode(npy).decode()}
                 row = dict(record)
-                row["payload"] = None if payload is None \
-                    else _canonical(payload)
-                result.pk_map[uuid] = store.insert_node_row(row)
-                result.nodes_imported += 1
+                # a payload document goes in as-is: insert_node_rows
+                # serializes canonically and routes bulk content above the
+                # inline threshold to the blob repository (dedup by digest)
+                row["payload"] = payload
+                to_insert.append(row)
                 new_uuids.add(uuid)
-                if result.nodes_imported % 500 == 0:
-                    say(f"  {result.nodes_imported} nodes imported...")
+            for pk, row in zip(store.insert_node_rows(to_insert), to_insert):
+                result.pk_map[row["uuid"]] = pk
+            result.nodes_imported = len(to_insert)
+            if to_insert:
+                say(f"  {result.nodes_imported} nodes inserted...")
 
+            link_rows: list[tuple[int, int, LinkType, str]] = []
             for link in links:
                 if link["in"] in deduped_uuids or \
                         link["out"] in deduped_uuids:
@@ -419,16 +519,15 @@ def import_archive(store: ProvenanceStore, path: str, *,
                         link["out"] in new_uuids) \
                         and store.has_link(in_pk, out_pk, lt, link["label"]):
                     continue
-                store.add_link(in_pk, out_pk, lt, link["label"])
-                result.links_imported += 1
+                link_rows.append((in_pk, out_pk, lt, link["label"]))
+            store.add_links(link_rows)
+            result.links_imported = len(link_rows)
 
-            for entry in logs:
-                if entry["node"] not in new_uuids:
-                    continue  # only newly-inserted nodes get their logs
-                store.add_log(result.pk_map[entry["node"]],
-                              entry["levelname"], entry["message"],
-                              ts=entry["time"])
-                result.logs_imported += 1
+            store.add_logs([(result.pk_map[e["node"]], e["levelname"],
+                             e["message"], e["time"])
+                            for e in logs if e["node"] in new_uuids])
+            result.logs_imported = sum(
+                1 for e in logs if e["node"] in new_uuids)
 
             # reconstruct cached_from_pk from the durable uuid reference;
             # raw SQL (not update_process) so the imported node's mtime
