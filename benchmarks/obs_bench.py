@@ -1,0 +1,145 @@
+"""Observability overhead benchmarks (ISSUE 6).
+
+The span tracer instruments permanent hot paths (store commits, checkpoint
+flushes, cache lookups, every process run), so its *disabled* cost is a
+contract, not a hope. Two metrics:
+
+  O1 disabled overhead  — cost of a `with span():` block with REPRO_TRACE
+                          off (the shared no-op singleton), scaled by the
+                          spans-per-process count of a real traced run and
+                          compared against the per-process engine time
+                          (engine_bench B1 methodology). MUST stay < 5%.
+  O2 enabled overhead   — the same engine throughput run with tracing +
+                          timeline persistence on, as a ratio over the
+                          disabled run. Reported (not asserted): tracing
+                          is opt-in, you pay only when you ask.
+
+Usage:
+    python benchmarks/obs_bench.py                # full N, prints json
+    python benchmarks/obs_bench.py -o BENCH_obs.json
+    python benchmarks/obs_bench.py --smoke        # small N + the 5% bar
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from repro.observability import metrics, trace  # noqa: E402
+from repro.observability.timeline import load_spans  # noqa: E402
+
+
+def bench_disabled_span_cost(n: int = 200_000) -> float:
+    """Per-call cost (seconds) of a disabled `with span():` block."""
+    trace.disable()
+    span = trace.span
+    # warm-up + measurement; the block body is empty so this is pure
+    # tracer dispatch: one function call + one no-op context manager
+    for _ in range(1000):
+        with span("warm"):
+            pass
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with span("x", pk=1):
+            pass
+    return (time.perf_counter() - t0) / n
+
+
+def _engine_run(n_processes: int) -> float:
+    """Per-process wall time of the B1-style engine throughput run."""
+    import engine_bench
+
+    r = engine_bench.bench_engine_throughput(n_processes=n_processes,
+                                             slots=100)
+    return r["us_per_call"] / 1e6
+
+
+def count_spans_per_process() -> int:
+    """How many spans one traced WorkChain run emits (from its persisted
+    timeline — the same data `repro process report` renders)."""
+    import engine_bench
+
+    trace.enable()
+    try:
+        runner, store = engine_bench._fresh_runner(slots=10)
+        Noop = engine_bench._NoopChain.get()
+        from repro.core import Int
+
+        async def main():
+            h = runner.submit(Noop, {"n": Int(1)})
+            await h.process.wait_done()
+            return h.pk
+
+        pk = runner.loop.run_until_complete(main())
+        return len(load_spans(store, pk))
+    finally:
+        trace.disable()
+
+
+def run_all(n_processes: int) -> dict:
+    span_cost = bench_disabled_span_cost()
+    spans_per_proc = count_spans_per_process()
+
+    trace.disable()
+    metrics.reset_registry()
+    t_disabled = _engine_run(n_processes)
+
+    trace.enable()
+    metrics.reset_registry()
+    try:
+        t_enabled = _engine_run(n_processes)
+    finally:
+        trace.disable()
+
+    # the contract: even if every span of a traced run stayed instrumented
+    # on the hot path, the disabled-tracer dispatch cost per process is a
+    # negligible fraction of what the engine spends per process
+    disabled_pct = span_cost * spans_per_proc / t_disabled * 100
+    return {
+        "disabled_span_ns": round(span_cost * 1e9, 1),
+        "spans_per_process": spans_per_proc,
+        "engine_us_per_process_disabled": round(t_disabled * 1e6, 1),
+        "engine_us_per_process_enabled": round(t_enabled * 1e6, 1),
+        "disabled_overhead_pct": round(disabled_pct, 4),
+        "enabled_overhead_ratio": round(t_enabled / t_disabled, 3),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("-o", "--out", default=None,
+                    help="json file to write results into")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small N + assert the <5%% disabled-overhead bar")
+    ap.add_argument("-n", "--processes", type=int, default=200)
+    args = ap.parse_args(argv)
+
+    n = 60 if args.smoke else args.processes
+    results = run_all(n)
+    print(json.dumps(results, indent=1))
+
+    if args.smoke:
+        assert results["spans_per_process"] >= 3, \
+            f"traced run recorded only {results['spans_per_process']} spans"
+        pct = results["disabled_overhead_pct"]
+        assert pct < 5.0, \
+            f"O1 bar: disabled tracer costs {pct:.2f}% of engine time (>=5%)"
+        print(f"smoke OK: disabled overhead {pct:.4f}% "
+              f"({results['spans_per_process']} spans/process, "
+              f"{results['disabled_span_ns']}ns/span)")
+
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(results, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

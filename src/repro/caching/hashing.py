@@ -29,6 +29,7 @@ import numpy as _np
 
 from repro.core.datatypes import ArrayData, DataValue, FolderData
 from repro.core.ports import PortNamespace
+from repro.observability import trace
 
 
 def _sha256(*chunks: bytes) -> str:
@@ -95,17 +96,18 @@ def _canonicalize(ns: PortNamespace | None, values: Mapping[str, Any],
 def compute_input_hash(process_cls: type, inputs: Mapping[str, Any],
                        ns: PortNamespace | None = None) -> str:
     """The canonical input fingerprint for one process invocation."""
-    if ns is None:
-        ns = process_cls.spec().inputs
-    document = {
-        # fully qualified, so same-named classes in different modules
-        # cannot serve each other's outputs
-        "process_type": f"{process_cls.__module__}:"
-                        f"{process_cls.__qualname__}",
-        "salt": str(_cache_salt(process_cls)),
-        "inputs": _canonicalize(ns, inputs, skip_metadata=True),
-    }
-    return _sha256(b"repro-cache-v1:", _canonical_json(document))
+    with trace.span("cache.hash"):
+        if ns is None:
+            ns = process_cls.spec().inputs
+        document = {
+            # fully qualified, so same-named classes in different modules
+            # cannot serve each other's outputs
+            "process_type": f"{process_cls.__module__}:"
+                            f"{process_cls.__qualname__}",
+            "salt": str(_cache_salt(process_cls)),
+            "inputs": _canonicalize(ns, inputs, skip_metadata=True),
+        }
+        return _sha256(b"repro-cache-v1:", _canonical_json(document))
 
 
 def _cache_salt(process_cls: type) -> str:

@@ -20,6 +20,7 @@ import time
 from typing import Any, Callable
 
 from repro.engine.transport import LocalTransport, Transport
+from repro.observability.metrics import StatsDict
 
 
 class JobState(str, enum.Enum):
@@ -50,7 +51,7 @@ class SimulatedCluster:
         self._ids = itertools.count(1000)
         self.executables: dict[str, Callable[[dict], dict]] = {}
         self.filesystems: dict[str, dict[str, bytes]] = {}
-        self.stats = {"submits": 0, "queries": 0}
+        self.stats = StatsDict("scheduler", {"submits": 0, "queries": 0})
         # Executables run OFF the event loop: a worker whose loop is blocked
         # cannot answer broker heartbeats and gets presumed dead — the exact
         # failure mode kiwiPy's separate comm thread exists to prevent

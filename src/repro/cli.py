@@ -21,6 +21,13 @@ Control-plane verbs (the event-driven engine surface):
 
     repro -p <profile.db> process pause|play|kill|status <pk> [-w WORKDIR]
     repro -p <profile.db> process watch [--pk PK] [--once] [--timeout T]
+    repro -p <profile.db> process top [--once] [--interval S]
+
+Observability (docs/observability.md): `stats --json` merges the node
+counts with the metrics snapshots advertised by every daemon worker;
+`process top` is the live worker/process table; `process report <pk>`
+renders per-state dwell times and, for runs traced with REPRO_TRACE=1,
+the persisted span timeline.
 
 Mirrors the AiiDA `verdi process ...` verbs the paper's users drive the
 engine with. Control verbs go through the broker's RPC channel to whichever
@@ -71,12 +78,18 @@ def cmd_process_list(store: ProvenanceStore, args) -> None:
 
 
 def cmd_process_report(store: ProvenanceStore, args) -> None:
+    from repro.observability.timeline import (
+        TRACE_LEVELNAME, load_spans, render_dwell, render_timeline,
+    )
+
     node = store.get_node(args.pk)
     if node is None:
         sys.exit(f"no node with pk={args.pk}")
     print(f"{node['process_type']}<{args.pk}> "
           f"[{node['process_state']}] exit={node['exit_status']}")
     for log in store.get_logs(args.pk):
+        if log["levelname"] == TRACE_LEVELNAME:
+            continue  # span timelines get their own rendering below
         stamp = time.strftime("%H:%M:%S", time.localtime(log["time"]))
         print(f"  {stamp} [{log['levelname']}] {log['message']}")
     # recurse into called subprocesses
@@ -85,6 +98,10 @@ def cmd_process_report(store: ProvenanceStore, args) -> None:
             child = store.get_node(child_pk)
             print(f"  +-- {child['process_type']}<{child_pk}> "
                   f"[{child['process_state']}] exit={child['exit_status']}")
+    print("\nstate dwell times:")
+    print(render_dwell(node))
+    print("\nspan timeline:")
+    print(render_timeline(load_spans(store, args.pk)))
 
 
 def cmd_process_show(store: ProvenanceStore, args) -> None:
@@ -337,17 +354,134 @@ def cmd_process_watch(store: ProvenanceStore, args) -> None:
         ctl.close()
 
 
+def _worker_snapshots(args) -> list[dict]:
+    """Status dicts of the connected daemon workers ([] when no daemon
+    is reachable — stats/top degrade to the local view then)."""
+    from repro.engine.controller import NoRunningDaemon, ProcessController
+
+    workdir = (getattr(args, "workdir", None)
+               or os.path.dirname(os.path.abspath(args.profile)))
+    try:
+        ctl = ProcessController.from_workdir(workdir, timeout=5.0)
+    except NoRunningDaemon:
+        return []
+    try:
+        return ctl.workers()
+    except (ConnectionError, TimeoutError):
+        return []
+    finally:
+        ctl.close()
+
+
 def cmd_stats(store: ProvenanceStore, args) -> None:
-    print("node counts:")
+    from repro.observability.metrics import get_registry, merge_snapshots
+
+    workers = _worker_snapshots(args)
+    # this CLI process's own instruments (store stats from the profile
+    # open above) merged with every worker's advertised snapshot
+    merged = merge_snapshots(
+        [get_registry().snapshot()]
+        + [w.get("metrics") or {} for w in workers])
+    node_counts = {}
     for nt in NodeType:
         c = QueryBuilder(store).nodes(nt).count() if nt != NodeType.DATA \
             else store.count_nodes(NodeType.DATA)
         if c:
-            print(f"  {nt.value:24} {c}")
+            node_counts[nt.value] = c
     unfinished = store.unfinished_processes()
-    print(f"unfinished processes: {len(unfinished)}")
-    for n in unfinished[:10]:
+
+    if getattr(args, "json", False):
+        print(json.dumps({
+            "nodes": node_counts,
+            "unfinished": len(unfinished),
+            "metrics": merged,
+            "repository": store.repository.stats(),
+            "workers": [{k: v for k, v in w.items() if k != "metrics"}
+                        for w in workers],
+        }, indent=2))
+        return
+
+    print("node counts:")
+    for name, c in node_counts.items():
+        print(f"  {name:24} {c}")
+    unfin = unfinished
+    print(f"unfinished processes: {len(unfin)}")
+    for n in unfin[:10]:
         print(f"  pk={n['pk']} {n['process_type']} [{n['process_state']}]")
+    repo = store.repository.stats()
+    print(f"repository: {repo['blobs']} blob(s), {repo['bytes']} byte(s)")
+    if workers:
+        print(f"daemon workers: {len(workers)}")
+        for w in workers:
+            print(f"  {w.get('worker', '?'):28} slots={w.get('slots', '?')}"
+                  f" running={len(w.get('pks') or [])}")
+    if merged["counters"]:
+        print("counters:")
+        for name, v in merged["counters"].items():
+            print(f"  {name:32} {v}")
+    for name, h in merged["histograms"].items():
+        if h.get("count"):
+            mean = h["sum"] / h["count"]
+            print(f"  {name:32} n={h['count']} mean={mean * 1e3:.2f}ms")
+
+
+def cmd_process_top(store: ProvenanceStore, args) -> None:
+    """Live table of workers + the processes they are driving — the
+    `verdi process list --live` answer, fed by worker advertisements."""
+    from repro.engine.controller import NoRunningDaemon, ProcessController
+    from repro.provenance.store import SUMMARY_COLUMNS
+
+    workdir = (getattr(args, "workdir", None)
+               or os.path.dirname(os.path.abspath(args.profile)))
+
+    def render_once(ctl) -> None:
+        workers = ctl.workers()
+        print(time.strftime("%H:%M:%S"), f"— {len(workers)} worker(s)")
+        print(f"{'worker':28}  {'pid':>7}  {'slots':>5}  {'run':>4}  "
+              f"{'tasks':>6}  {'commits':>8}  {'rpc mean':>9}")
+        for w in workers:
+            snap = w.get("metrics") or {}
+            counters = snap.get("counters") or {}
+            rpc = (snap.get("histograms") or {}).get("broker.rpc_seconds")
+            rpc_mean = (f"{rpc['sum'] / rpc['count'] * 1e3:.1f}ms"
+                        if rpc and rpc.get("count") else "-")
+            print(f"{w.get('worker', '?'):28}  {w.get('pid', ''):>7}  "
+                  f"{w.get('slots', ''):>5}  {len(w.get('pks') or []):>4}  "
+                  f"{counters.get('daemon.tasks', 0):>6}  "
+                  f"{counters.get('store.commits', 0):>8}  {rpc_mean:>9}")
+        pks = sorted({pk for w in workers for pk in (w.get("pks") or [])})
+        if pks:
+            rows = store.get_nodes(pks, columns=SUMMARY_COLUMNS)
+            print(f"\n{'PK':>6}  {'age':>6}  {'type':28}  state")
+            for pk in pks:
+                node = rows.get(pk)
+                if node is None:
+                    continue
+                print(f"{node['pk']:>6}  {_fmt_age(node['ctime']):>6}  "
+                      f"{(node['process_type'] or '')[:28]:28}  "
+                      f"{node['process_state'] or ''}")
+        else:
+            print("\nno live processes")
+
+    try:
+        ctl = ProcessController.from_workdir(workdir, timeout=5.0)
+    except NoRunningDaemon as exc:
+        # like `watch --once`: a missing daemon is an answer, not an error
+        if args.once:
+            print(f"{exc} — nothing running")
+            return
+        sys.exit(str(exc))
+    try:
+        while True:
+            render_once(ctl)
+            if args.once:
+                return
+            time.sleep(args.interval)
+            print()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        ctl.close()
 
 
 def cmd_cache_stats(store: ProvenanceStore, args) -> None:
@@ -520,6 +654,15 @@ def main(argv=None) -> None:
     pw.add_argument("-w", "--workdir", default=None,
                     help="daemon workdir holding broker.json "
                          "(default: profile directory)")
+    pt = proc_sub.add_parser(
+        "top", help="live table of workers + the processes they drive")
+    pt.add_argument("--once", action="store_true",
+                    help="render one frame and exit")
+    pt.add_argument("--interval", type=float, default=2.0,
+                    help="seconds between refreshes (default 2)")
+    pt.add_argument("-w", "--workdir", default=None,
+                    help="daemon workdir holding broker.json "
+                         "(default: profile directory)")
 
     p_node = sub.add_parser("node")
     node_sub = p_node.add_subparsers(dest="sub", required=True)
@@ -533,7 +676,12 @@ def main(argv=None) -> None:
     ge.add_argument("--out", default="")
     ge.add_argument("--depth", type=int, default=3)
 
-    sub.add_parser("stats")
+    p_stats = sub.add_parser("stats")
+    p_stats.add_argument("--json", action="store_true",
+                         help="machine-readable merged stats document")
+    p_stats.add_argument("-w", "--workdir", default=None,
+                         help="daemon workdir holding broker.json "
+                              "(default: profile directory)")
 
     p_cache = sub.add_parser("cache")
     cache_sub = p_cache.add_subparsers(dest="sub", required=True)
@@ -595,6 +743,8 @@ def main(argv=None) -> None:
         cmd_process_control(store, args)
     elif args.cmd == "process" and args.sub == "watch":
         cmd_process_watch(store, args)
+    elif args.cmd == "process" and args.sub == "top":
+        cmd_process_top(store, args)
     elif args.cmd == "node" and args.sub == "show":
         cmd_node_show(store, args)
     elif args.cmd == "graph" and args.sub == "export":

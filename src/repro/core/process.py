@@ -25,6 +25,11 @@ from repro.core.exit_code import ExitCode
 from repro.core.ports import PortNamespace
 from repro.core.process_spec import ProcessSpec
 from repro.core.statemachine import ProcessState, StateMachine
+from repro.observability import metrics as _metrics
+from repro.observability import trace
+from repro.observability.timeline import (
+    STATE_HISTORY_ATTR, TRACE_LEVELNAME, serialize_spans,
+)
 from repro.provenance.store import LinkType, NodeType
 
 # The process currently executing in this task — used to attach CALL links
@@ -125,6 +130,10 @@ class Process(StateMachine):
         self._pending_update: dict | None = None
         self._ckpt_dirty = False
         self._last_ckpt_json: str | None = None
+        # per-state dwell times ([state, wall-ts] per transition) — rides
+        # the existing attribute writes, no extra commits
+        self._state_history: list[list] = []
+        self._timeline = None
 
         # input fingerprint — computed for every cacheable type regardless
         # of the current policy (so any later run can reuse this node);
@@ -273,7 +282,7 @@ class Process(StateMachine):
         so durability is guaranteed before the process can lose the CPU."""
         if self._pending_update is None and not self._ckpt_dirty:
             return
-        with self.store.transaction():
+        with trace.span("checkpoint.flush"), self.store.transaction():
             if self._pending_update is not None:
                 update, self._pending_update = self._pending_update, None
                 self.store.update_process(self.pk, **update)
@@ -294,13 +303,15 @@ class Process(StateMachine):
     # -- state machine hooks -------------------------------------------------------------
     def on_entered(self, from_state: ProcessState) -> None:
         state = self.state
+        self._state_history.append([state.value, time.time()])
         self._merge_pending({
             "state": state.value,
             "exit_status": (self._exit_code.status
                             if self._exit_code else None),
             "exit_message": (self._exit_code.message
                              if self._exit_code else None),
-            "attributes": {"paused": state is ProcessState.PAUSED}})
+            "attributes": {"paused": state is ProcessState.PAUSED,
+                           STATE_HISTORY_ATTR: self._state_history}})
         if state.is_terminal:
             # the terminal write is one transaction: final state +
             # buffered attributes + checkpoint removal (joins the caller's
@@ -385,10 +396,18 @@ class Process(StateMachine):
         self._pending_update = None
         self._ckpt_dirty = False
         self._last_ckpt_json = None
+        self._timeline = None
         self.pk = checkpoint["pk"]
         self.parent_pk = checkpoint.get("parent_pk")
-        node = self.store.get_node(self.pk, columns=("node_hash",)) or {}
+        node = self.store.get_node(
+            self.pk, columns=("node_hash", "attributes")) or {}
         self._input_hash = node.get("node_hash")
+        # continue the recorded dwell history across worker hand-offs
+        try:
+            attrs = json.loads(node.get("attributes") or "{}")
+            self._state_history = list(attrs.get(STATE_HISTORY_ATTR) or [])
+        except ValueError:
+            self._state_history = []
         self.load_checkpoint_extras(checkpoint.get("extras", {}))
         return self
 
@@ -526,9 +545,12 @@ class Process(StateMachine):
             from repro.caching.registry import CacheRegistry
             if not is_caching_enabled_for(type(self)):
                 return None
-            hit = CacheRegistry(self.store).find_cached(
-                type(self).__name__, self._input_hash, exclude_pk=self.pk)
+            with trace.span("cache.lookup", pk=self.pk):
+                hit = CacheRegistry(self.store).find_cached(
+                    type(self).__name__, self._input_hash,
+                    exclude_pk=self.pk)
             if hit is None:
+                _metrics.get_registry().counter("cache.misses").inc()
                 return None
             # phase 1, read-only: rehydrate every output before touching
             # the graph, so a bad source leaves no partial clone behind
@@ -573,6 +595,7 @@ class Process(StateMachine):
                 self.store.update_process(self.pk, attributes=attrs)
                 self.report("cache hit: cloned %d output(s) from %s<%d>",
                             len(hit.outputs), type(self).__name__, hit.pk)
+            _metrics.get_registry().counter("cache.hits").inc()
             return ExitCode(hit.exit_status, hit.exit_message or "",
                             "SUCCESS")
         except Exception:  # noqa: BLE001 — txn already rolled the clones
@@ -584,8 +607,33 @@ class Process(StateMachine):
                                traceback.format_exc())
             return None
 
+    def _persist_timeline(self) -> None:
+        """Drain this run's span timeline into ONE TRACE log row. Called
+        inside the terminal transaction, so the timeline rides the
+        existing unit of work (no extra commit per process)."""
+        sink, self._timeline = self._timeline, None
+        if sink is None:
+            return
+        try:
+            spans = sink.drain(stamp_open=True)
+            if spans:
+                self.store.add_logs([(self.pk, TRACE_LEVELNAME,
+                                      serialize_spans(spans), time.time())])
+        except Exception:  # noqa: BLE001 — telemetry must not kill the run
+            self.runner.logger.exception(
+                "timeline persistence failed for %d", self.pk)
+
     async def step_until_terminated(self) -> ExitCode:
         token = CURRENT_PROCESS.set(self)
+        # the whole run is one root span; sub-steps (state transitions,
+        # cache lookup, checkpoint flushes, workchain steps) nest under
+        # it and the drained tree persists with the terminal transaction
+        self._timeline = trace.start_timeline()
+        sink_token = (trace.push_sink(self._timeline)
+                      if self._timeline is not None else None)
+        root = trace.span("process.run", pk=self.pk,
+                          process=type(self).__name__)
+        root.__enter__()
         # every live process is reachable over RPC for its whole run —
         # regardless of which runner/worker drives it (paper §III.C.b)
         self._register_control()
@@ -599,10 +647,12 @@ class Process(StateMachine):
             self.transition_to(ProcessState.RUNNING)
             exit_code = self._maybe_use_cache()
             if exit_code is None:
-                result = await self.run()
+                with trace.span("process.body"):
+                    result = await self.run()
                 exit_code = _interpret_result(result)
                 # the terminal step is one unit of work: output storing +
-                # links + final state + checkpoint removal, one commit
+                # links + final state + checkpoint removal + span
+                # timeline, one commit
                 with self.store.transaction():
                     if exit_code.is_finished_ok:
                         err = self._commit_outputs()
@@ -611,24 +661,34 @@ class Process(StateMachine):
                                 11, f"output validation failed: {err}",
                                 "ERROR_INVALID_OUTPUTS")
                     self._exit_code = exit_code
+                    self._persist_timeline()
                     if not self.is_terminated:
                         self.transition_to(ProcessState.FINISHED)
             else:
                 self._exit_code = exit_code
-                if not self.is_terminated:
-                    self.transition_to(ProcessState.FINISHED)
+                with self.store.transaction():
+                    self._persist_timeline()
+                    if not self.is_terminated:
+                        self.transition_to(ProcessState.FINISHED)
         except ProcessKilled as exc:
             self._exit_code = ExitCode(998, str(exc), "KILLED")
-            if not self.is_terminated:
-                self.transition_to(ProcessState.KILLED)
+            with self.store.transaction():
+                self._persist_timeline()
+                if not self.is_terminated:
+                    self.transition_to(ProcessState.KILLED)
         except Exception:  # noqa: BLE001 → EXCEPTED, never propagate
             tb = traceback.format_exc()
-            self.store.add_log(self.pk, "ERROR", tb)
             self._exit_code = ExitCode(999, "process excepted", "EXCEPTED")
-            if not self.is_terminated:
-                self.transition_to(ProcessState.EXCEPTED)
+            with self.store.transaction():
+                self.store.add_log(self.pk, "ERROR", tb)
+                self._persist_timeline()
+                if not self.is_terminated:
+                    self.transition_to(ProcessState.EXCEPTED)
         finally:
             self._unregister_control()
+            root.__exit__(None, None, None)
+            if sink_token is not None:
+                trace.pop_sink(sink_token)
             CURRENT_PROCESS.reset(token)
         return self._exit_code
 

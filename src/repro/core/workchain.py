@@ -20,6 +20,7 @@ from typing import Any, Callable, Mapping
 from repro.core.datatypes import DataValue
 from repro.core.exit_code import ExitCode
 from repro.core.process import Process, ProcessState
+from repro.observability import trace
 from repro.provenance.store import NodeType
 
 
@@ -208,7 +209,8 @@ class _StepStepper:
 
     def step(self, wc: "WorkChain"):
         method = getattr(wc, self.step_def.name)
-        result = method()
+        with trace.span("workchain.step", step=self.step_def.name):
+            result = method()
         self.done = True
         return True, result
 

@@ -35,6 +35,9 @@ import time
 import uuid
 from typing import Any, Awaitable, Callable, Iterator
 
+from repro.observability import metrics as _metrics
+from repro.observability import trace
+
 logger = logging.getLogger("repro.engine.broker")
 
 _TASKS_SCHEMA = """
@@ -430,6 +433,8 @@ class BrokerClient:
                         fut.set_result(msg.get("result"))
             elif kind == "broadcast":
                 import fnmatch
+                _metrics.get_registry().counter(
+                    "broker.broadcasts_received").inc()
                 for filt, handler in list(self._broadcast_handlers.values()):
                     if filt and not fnmatch.fnmatch(msg["subject"], filt):
                         continue
@@ -492,11 +497,16 @@ class BrokerClient:
         rid = str(uuid.uuid4())
         fut = asyncio.get_running_loop().create_future()
         self._rpc_waiters[rid] = fut
-        if not self._send({"kind": "rpc_send", "rid": rid,
-                           "identifier": identifier, "msg": msg}):
-            self._rpc_waiters.pop(rid, None)
-            raise ConnectionError("broker connection lost")
-        return await fut
+        t0 = time.perf_counter()
+        with trace.span("broker.rpc", identifier=identifier):
+            if not self._send({"kind": "rpc_send", "rid": rid,
+                               "identifier": identifier, "msg": msg}):
+                self._rpc_waiters.pop(rid, None)
+                raise ConnectionError("broker connection lost")
+            result = await fut
+        _metrics.get_registry().histogram("broker.rpc_seconds").observe(
+            time.perf_counter() - t0)
+        return result
 
     def rpc_send(self, identifier: str, msg: dict) -> Any:
         return self.rpc_send_async(identifier, msg)
@@ -512,6 +522,7 @@ class BrokerClient:
 
     def broadcast_send(self, subject: str, sender: Any = None,
                        body: dict | None = None) -> None:
+        _metrics.get_registry().counter("broker.broadcasts_sent").inc()
         self._send({"kind": "broadcast", "subject": subject,
                     "sender": sender, "body": body or {}})
 

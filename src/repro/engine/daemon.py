@@ -20,6 +20,9 @@ import time
 from typing import Any
 
 from repro.engine.runner import TERMINAL
+from repro.observability import logs as obs_logs
+from repro.observability import metrics as _metrics
+from repro.observability import trace
 from repro.provenance.store import SUMMARY_COLUMNS
 
 logger = logging.getLogger("repro.engine.daemon")
@@ -41,19 +44,29 @@ def make_process_task_handler(runner, store, owned: set | None = None):
 
     async def handle(payload: dict) -> None:
         pk = payload["pk"]
+        registry = _metrics.get_registry()
+        registry.counter("daemon.tasks").inc()
+        sent_ts = payload.get("ts")
+        if sent_ts is not None:
+            # submit→pickup latency: how long the task sat in the queue
+            registry.histogram("daemon.pickup_seconds").observe(
+                max(0.0, time.time() - sent_ts))
         checkpoint = store.load_checkpoint(pk)
         if checkpoint is None:
             node = store.get_node(pk, columns=SUMMARY_COLUMNS)
             if node and node.get("process_state") in TERMINAL:
                 return  # duplicate delivery of a finished process
             raise RuntimeError(f"no checkpoint for process {pk}")
-        process = Process.recreate_from_checkpoint(checkpoint, runner=runner)
+        with trace.span("daemon.resume", pk=pk):
+            process = Process.recreate_from_checkpoint(checkpoint,
+                                                       runner=runner)
         if owned is not None:
             owned.add(pk)
         try:
             # step_until_terminated registers process.<pk> RPC itself and
             # honours a durably-recorded kill before doing any work
-            await process.step_until_terminated()
+            with obs_logs.pk_context(pk):
+                await process.step_until_terminated()
         finally:
             if owned is not None:
                 owned.discard(pk)
@@ -71,7 +84,7 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
     from repro.engine.runner import Runner, set_default_runner
     from repro.provenance.store import configure_store
 
-    logging.basicConfig(level=logging.WARNING)
+    obs_logs.configure()  # honours REPRO_LOG_LEVEL; repro.* namespace only
     store = configure_store(store_path)
 
     async def main() -> None:
@@ -81,13 +94,17 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
         runner.distributed = True
         set_default_runner(runner)
 
-        # advertise this worker + the pks it owns (control-plane directory)
+        # advertise this worker + the pks it owns (control-plane directory);
+        # the advert doubles as the worker's metrics publication — `repro
+        # stats`/`repro process top` merge these snapshots client-side
         worker_id = f"worker.{os.getpid()}-{uuid.uuid4().hex[:6]}"
+        obs_logs.set_worker_id(worker_id)
         owned: set[int] = set()
         client.add_rpc_subscriber(
             worker_id,
             lambda msg: {"worker": worker_id, "pid": os.getpid(),
-                         "slots": slots, "pks": sorted(owned)})
+                         "slots": slots, "pks": sorted(owned),
+                         "metrics": _metrics.get_registry().snapshot()})
 
         client.add_task_subscriber(
             PROCESS_QUEUE, make_process_task_handler(runner, store, owned))
@@ -104,7 +121,7 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
 def _broker_main(db_path: str, port_file: str) -> None:
     from repro.engine.broker import BrokerServer
 
-    logging.basicConfig(level=logging.WARNING)
+    obs_logs.configure()
 
     async def main() -> None:
         server = BrokerServer(db_path, heartbeat=1.0)
@@ -222,7 +239,7 @@ class Daemon:
         import socket
 
         msg = json.dumps({"kind": "task_send", "queue": PROCESS_QUEUE,
-                          "payload": {"pk": pk}}) + "\n"
+                          "payload": {"pk": pk, "ts": time.time()}}) + "\n"
         with socket.create_connection((self.host, self.port), timeout=10) as s:
             s.sendall(msg.encode())
             time.sleep(0.05)

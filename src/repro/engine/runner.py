@@ -10,10 +10,13 @@ from __future__ import annotations
 
 import asyncio
 import logging
+import time
 from typing import Any, Iterable
 
 from repro.core.exit_code import ExitCode
 from repro.core.process import Process
+from repro.observability import metrics as _metrics
+from repro.observability import trace
 from repro.engine.communicator import (
     LocalCommunicator, parse_state_subject, process_rpc_id,
 )
@@ -101,14 +104,19 @@ class Runner:
         dies). Prefer the free functions in ``engine/launch.py`` — this is
         the underlying mechanism for explicit-runner use."""
         from repro.core.builder import expand_launch_target
-        process_class, inputs = expand_launch_target(process_class, inputs)
-        process = process_class(inputs=inputs, runner=self,
-                                parent_pk=parent_pk)
-        if getattr(self, "distributed", False):
-            from repro.engine.daemon import PROCESS_QUEUE
-            self.communicator.task_send(PROCESS_QUEUE, {"pk": process.pk})
-            return QueuedHandle(process.pk)
-        return self._schedule(process)
+        with trace.span("engine.submit"):
+            process_class, inputs = expand_launch_target(process_class,
+                                                         inputs)
+            process = process_class(inputs=inputs, runner=self,
+                                    parent_pk=parent_pk)
+            _metrics.get_registry().counter("engine.submits").inc()
+            if getattr(self, "distributed", False):
+                from repro.engine.daemon import PROCESS_QUEUE
+                # "ts" lets the picking worker measure queue latency
+                self.communicator.task_send(
+                    PROCESS_QUEUE, {"pk": process.pk, "ts": time.time()})
+                return QueuedHandle(process.pk)
+            return self._schedule(process)
 
     def _schedule(self, process: Process) -> ProcessHandle:
         # controllable from the moment of submission — even while queued
@@ -176,6 +184,10 @@ class Runner:
         terminal ``state_changed.<pk>.<state>`` broadcast arrives — there
         is no poll loop, only a coarse liveness fallback that re-checks
         the store in case the owning worker crashed without broadcasting."""
+        with trace.span("engine.wait", pk=pk):
+            await self._wait_for_process(pk)
+
+    async def _wait_for_process(self, pk: int) -> None:
         handle = self._processes.get(pk)
         if handle is not None:
             await handle.process.wait_done()

@@ -18,6 +18,8 @@ import asyncio
 import time
 from typing import Any, Callable
 
+from repro.observability.metrics import StatsDict
+
 
 class Transport:
     """Base transport: open/close + exec/put/get primitives."""
@@ -121,7 +123,7 @@ class TransportQueue:
         self._transports: dict[str, Transport] = {}
         self._last_open: dict[str, float] = {}
         self._locks: dict[str, asyncio.Lock] = {}
-        self.stats = {"requests": 0, "opens": 0}
+        self.stats = StatsDict("transport", {"requests": 0, "opens": 0})
 
     def register_transport(self, transport: Transport) -> None:
         self._transports[transport.hostname] = transport

@@ -1,0 +1,20 @@
+"""Unified observability layer: span tracing, metrics, logs, timelines.
+
+The profiling substrate for the engine (docs/observability.md):
+
+* :mod:`repro.observability.trace` — spans with contextvar parent
+  propagation; off by default (``REPRO_TRACE``), near-zero-cost when off.
+* :mod:`repro.observability.metrics` — process-wide counter / gauge /
+  histogram registry; :class:`~repro.observability.metrics.StatsDict`
+  bridges the legacy ``*.stats`` dicts into it.
+* :mod:`repro.observability.logs` — namespaced logging config honouring
+  ``REPRO_LOG_LEVEL``, with worker-id + pk record tagging.
+* :mod:`repro.observability.timeline` — persisted per-process span
+  timelines + the renderers behind ``repro process report``.
+"""
+
+from repro.observability import logs, metrics, timeline, trace  # noqa: F401
+from repro.observability.metrics import (  # noqa: F401
+    StatsDict, get_registry, merge_snapshots,
+)
+from repro.observability.trace import span, traced  # noqa: F401

@@ -30,6 +30,9 @@ import tempfile
 import threading
 from typing import Iterator
 
+from repro.observability import metrics as _metrics
+from repro.observability import trace
+
 
 class BlobNotFound(KeyError):
     """No blob with the requested digest in this repository."""
@@ -59,6 +62,7 @@ class BlobRepository:
         """Store ``data``; returns its sha256 digest. Idempotent — putting
         bytes that are already present is a no-op (content addressing)."""
         digest = self.digest_of(data)
+        _metrics.get_registry().counter("repository.puts").inc()
         if self._mem is not None:
             with self._lock:
                 self._mem.setdefault(digest, bytes(data))
@@ -66,29 +70,32 @@ class BlobRepository:
         path = self._path(digest)
         if os.path.exists(path):
             return digest
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   prefix=".tmp-")
-        try:
-            with os.fdopen(fd, "wb") as fh:
-                fh.write(data)
-            os.replace(tmp, path)  # atomic even with concurrent writers
-        except BaseException:
+        with trace.span("repo.put", size=len(data)):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                       prefix=".tmp-")
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                with os.fdopen(fd, "wb") as fh:
+                    fh.write(data)
+                os.replace(tmp, path)  # atomic even with concurrent writers
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
         return digest
 
     def get(self, digest: str) -> bytes:
+        _metrics.get_registry().counter("repository.gets").inc()
         if self._mem is not None:
             try:
                 return self._mem[digest]
             except KeyError:
                 raise BlobNotFound(digest) from None
         try:
-            with open(self._path(digest), "rb") as fh:
+            with trace.span("repo.get"), open(self._path(digest),
+                                              "rb") as fh:
                 return fh.read()
         except FileNotFoundError:
             raise BlobNotFound(digest) from None

@@ -49,6 +49,8 @@ import time
 import uuid as uuid_mod
 from typing import TYPE_CHECKING, Any, Iterable, Sequence
 
+from repro.observability import trace
+from repro.observability.metrics import StatsDict
 from repro.provenance.repository import BlobRepository
 
 if TYPE_CHECKING:  # imported lazily at runtime (core <-> provenance cycle)
@@ -158,8 +160,10 @@ class ProvenanceStore:
         #: repository instead of the nodes table
         self.inline_threshold = inline_threshold
         #: observability counters; ``commits`` is the unit-of-work metric
-        #: benchmarks and CI assert on (one commit per engine step)
-        self.stats: dict[str, int] = {"commits": 0}
+        #: benchmarks and CI assert on (one commit per engine step).
+        #: A StatsDict behaves exactly like the old plain dict but also
+        #: feeds the process-wide metrics registry (`repro stats`).
+        self.stats: dict[str, int] = StatsDict("store", {"commits": 0})
         self._local = threading.local()
         self._lock = threading.RLock()
         if path != ":memory:":
@@ -272,7 +276,8 @@ class ProvenanceStore:
                 self._local.rollback_cbs = []
                 raise
             else:
-                self._conn().commit()
+                with trace.span("store.commit"):
+                    self._conn().commit()
                 self.stats["commits"] += 1
             finally:
                 self._local.in_txn = False
@@ -304,7 +309,8 @@ class ProvenanceStore:
 
     def _commit(self) -> None:
         if not getattr(self._local, "in_txn", False):
-            self._conn().commit()
+            with trace.span("store.commit"):
+                self._conn().commit()
             self.stats["commits"] += 1
 
     # -- payload routing (blob repository) --------------------------------------
