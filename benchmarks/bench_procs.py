@@ -1,0 +1,46 @@
+"""Process classes for the saturation bench (B9).
+
+They live in an importable module — NOT in the bench script — because
+daemon workers recreate processes from their checkpoints by importing
+``module:qualname``; classes defined under ``__main__`` cannot cross the
+spawn boundary.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+
+from repro.core import Float
+from repro.core.process import Process
+from repro.provenance.store import NodeType
+
+
+class NoopCalc(Process):
+    """The shortest possible calcfunction-shaped process: all of its cost
+    is engine + control-plane overhead, which is what B9 measures."""
+
+    NODE_TYPE = NodeType.CALC_FUNCTION
+    CACHEABLE = False
+
+    async def run(self):
+        pass
+
+
+class HoldCalc(Process):
+    """Stays live (slot held, control endpoint owned) until an absolute
+    wall-clock deadline — how B9 pins 10k processes live at once without
+    the finish times stampeding."""
+
+    NODE_TYPE = NodeType.CALC_FUNCTION
+    CACHEABLE = False
+
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("until", valid_type=Float)
+
+    async def run(self):
+        delay = self.inputs["until"].value - time.time()
+        if delay > 0:
+            await self.interruptible(asyncio.sleep(delay))

@@ -7,18 +7,30 @@ patterns with RabbitMQ-faithful guarantees:
   acks, per-consumer heartbeats: a consumer that misses ``2 × heartbeat``
   is presumed dead and its un-acked tasks are requeued (paper: "upon
   missing two consecutive responses, RabbitMQ assumes the worker to be
-  dead and triggers the rescheduling mechanism").
+  dead and triggers the rescheduling mechanism"). Consumers declare a
+  **prefetch** (ready-queue high-water mark): excess tasks park in the
+  durable queue, and delivery round-robins across distinct submitter ids
+  so a bulk submitter cannot starve a trickle one.
 * **RPC** — request/response routed by subscriber identifier, forwarded
-  across OS processes: any client can reach ``process.<pk>`` wherever the
-  owning worker runs (paper §III.C.b). ``rpc_lookup`` queries the live
-  identifier directory, which is how workers advertise the pks they own.
-* **broadcast** — fan-out to all connected clients, durably: every event
-  is appended to a sqlite log with a monotonic sequence number, and a
-  client can replay missed events with ``events_since`` (so a watcher
-  that reconnects sees what happened while it was away).
+  across OS processes. Process control is *multiplexed*: a worker claims
+  the pks it runs with one ``own`` message instead of registering one
+  identifier per process, so the broker directory stays O(workers) while
+  ``rpc_send("process.<pk>")`` / ``rpc_lookup`` keep working unchanged.
+  ``rpc_send`` takes an optional deadline the broker enforces with a
+  ``cancelled`` reply plus a cancel notice to the (possibly hung) target.
+* **broadcast** — subject-filtered fan-out: clients push their fnmatch
+  patterns down with ``subscribe``/``unsubscribe`` and only matching
+  events are sent (bursts are coalesced into one framed multi-event
+  message). Every event is also appended to a sqlite log with a monotonic
+  sequence number for replay (``events_since``); when the log exceeds its
+  cap, compaction drops *superseded* state-change events of terminal
+  processes first, so a terminal notification is never evicted while
+  older chatter survives.
 
 Protocol: newline-delimited JSON over TCP (loopback). This is deliberately
 boring; the durability lives in sqlite (WAL), the liveness in heartbeats.
+Submission paths batch: ``task_send_many`` enqueues many payloads in one
+frame + one commit, and clients coalesce many frames per syscall.
 """
 
 from __future__ import annotations
@@ -29,12 +41,14 @@ import itertools
 import json
 import logging
 import os
+import re
 import socket
 import sqlite3
 import time
 import uuid
 from typing import Any, Awaitable, Callable, Iterator
 
+from repro.core.statemachine import TERMINAL_STATES
 from repro.observability import metrics as _metrics
 from repro.observability import trace
 
@@ -45,7 +59,7 @@ CREATE TABLE IF NOT EXISTS tasks (
     id INTEGER PRIMARY KEY AUTOINCREMENT,
     queue TEXT NOT NULL,
     payload TEXT NOT NULL,
-    state TEXT NOT NULL DEFAULT 'ready',   -- ready | inflight | done
+    state TEXT NOT NULL DEFAULT 'ready',   -- ready | inflight
     consumer TEXT,
     delivered_at REAL,
     created_at REAL NOT NULL
@@ -63,25 +77,50 @@ CREATE TABLE IF NOT EXISTS events (
 #: keep at most this many events in the durable broadcast log
 EVENT_LOG_CAP = 10000
 
+_TERMINAL = tuple(s.value for s in TERMINAL_STATES)
+_PROCESS_ID = re.compile(r"^process\.(\d+)$")
+_STATE_SUBJECT = re.compile(r"^state_changed\.(\d+)\.([a-z_]+)$")
+
+
+def _encode(msg: dict) -> bytes:
+    return json.dumps(msg).encode() + b"\n"
+
 
 class BrokerServer:
     """The broker daemon. One per deployment (like one RabbitMQ service)."""
 
     def __init__(self, db_path: str, host: str = "127.0.0.1", port: int = 0,
-                 heartbeat: float = 5.0):
+                 heartbeat: float = 5.0, event_log_cap: int = EVENT_LOG_CAP):
         self.db_path = db_path
         self.host = host
         self.port = port
         self.heartbeat = heartbeat
+        self.event_log_cap = event_log_cap
         self._server: asyncio.AbstractServer | None = None
         self._clients: dict[str, asyncio.StreamWriter] = {}
         self._consumers: dict[str, set[str]] = {}      # queue -> client ids
         self._rpc: dict[str, str] = {}                 # identifier -> client id
+        self._owners: dict[int, str] = {}              # pk -> owning client id
+        self._subs: dict[str, set[str]] = {}           # client id -> patterns
+        self._prefetch: dict[str, int] = {}            # client id -> HWM
         self._last_beat: dict[str, float] = {}
         self._pending_rpc: dict[str, tuple[str, Any]] = {}
+        self._rpc_timers: dict[str, asyncio.TimerHandle] = {}
+        self._bc_outbox: list[dict] = []
+        self._bc_scheduled = False
+        self._deliver_pending: set[str] = set()
+        self._deliver_scheduled = False
+        self._rr: dict[str, int] = {}                  # queue -> fair cursor
         self._events_uncommitted = 0
+        self._dirty = 0
         self._conn = None
         self._reaper_task: asyncio.Task | None = None
+        #: control-plane traffic accounting, served by ``broker_stats``
+        self.stats = {
+            "messages_in": 0, "messages_out": 0, "tasks_enqueued": 0,
+            "tasks_delivered": 0, "events_logged": 0, "events_compacted": 0,
+            "rpc_cancelled": 0, "heartbeats": 0,
+        }
 
     # -- storage ------------------------------------------------------------
     def conn(self) -> sqlite3.Connection:
@@ -92,8 +131,32 @@ class BrokerServer:
             self._conn.row_factory = sqlite3.Row
             self._conn.execute("PRAGMA journal_mode=WAL")
             self._conn.executescript(_TASKS_SCHEMA)
+            cols = [r[1] for r in self._conn.execute(
+                "PRAGMA table_info(tasks)")]
+            if "submitter" not in cols:
+                self._conn.execute("ALTER TABLE tasks ADD COLUMN submitter "
+                                   "TEXT NOT NULL DEFAULT ''")
+            self._conn.execute(
+                "CREATE INDEX IF NOT EXISTS idx_tasks_fair ON "
+                "tasks(queue, state, submitter)")
+            self._conn.execute(
+                "CREATE INDEX IF NOT EXISTS idx_events_ts ON events(ts)")
             self._conn.commit()
         return self._conn
+
+    def _maybe_commit(self, n: int = 1) -> None:
+        """Batch task-table commits: at-least-once delivery means losing an
+        uncommitted state flip only causes a redelivery, never a loss."""
+        self._dirty += n
+        if self._dirty >= 200:
+            self.conn().commit()
+            self._dirty = 0
+
+    def _commit_now(self) -> None:
+        if self._dirty or self._events_uncommitted:
+            self.conn().commit()
+            self._dirty = 0
+            self._events_uncommitted = 0
 
     # -- lifecycle -----------------------------------------------------------
     async def start(self) -> tuple[str, int]:
@@ -108,15 +171,17 @@ class BrokerServer:
         if self._reaper_task is not None:
             self._reaper_task.cancel()
             self._reaper_task = None
+        for timer in self._rpc_timers.values():
+            timer.cancel()
+        self._rpc_timers.clear()
         # closing the writers EOFs each _on_client loop so the per-client
         # handler tasks finish instead of lingering past the server
         for writer in list(self._clients.values()):
             writer.close()
         self._clients.clear()
         self._last_beat.clear()
-        if self._events_uncommitted and self._conn is not None:
-            self._conn.commit()
-            self._events_uncommitted = 0
+        if self._conn is not None:
+            self._commit_now()
         if self._server:
             self._server.close()
             await self._server.wait_closed()
@@ -149,21 +214,28 @@ class BrokerServer:
     def _drop_client(self, cid: str) -> None:
         self._clients.pop(cid, None)
         self._last_beat.pop(cid, None)
+        self._subs.pop(cid, None)
+        self._prefetch.pop(cid, None)
         for consumers in self._consumers.values():
             consumers.discard(cid)
         for ident in [k for k, v in self._rpc.items() if v == cid]:
             del self._rpc[ident]
+        for pk in [p for p, v in self._owners.items() if v == cid]:
+            del self._owners[pk]
         # fail RPCs whose target just died — callers must not hang forever
         for rid in [r for r, (_, target) in self._pending_rpc.items()
                     if target == cid]:
             origin, _ = self._pending_rpc.pop(rid)
+            timer = self._rpc_timers.pop(rid, None)
+            if timer is not None:
+                timer.cancel()
             self._send(origin, {"kind": "rpc_reply", "rid": rid,
                                 "error": "rpc target disconnected"})
         # requeue this consumer's inflight tasks immediately...
         self.conn().execute(
             "UPDATE tasks SET state='ready', consumer=NULL WHERE "
             "state='inflight' AND consumer=?", (cid,))
-        self.conn().commit()
+        self._commit_now()
         # ...and push them to surviving/new consumers right away
         for queue in list(self._consumers):
             self._deliver(queue)
@@ -176,74 +248,148 @@ class BrokerServer:
             self._drop_client(cid)
             return
         try:
-            writer.write(json.dumps(msg).encode() + b"\n")
+            writer.write(_encode(msg))
+            self.stats["messages_out"] += 1
         except Exception:  # noqa: BLE001
             self._drop_client(cid)
 
     # -- message dispatch ------------------------------------------------------------
     async def _handle(self, cid: str, msg: dict) -> None:
         kind = msg.get("kind")
+        self.stats["messages_in"] += 1
         if kind == "heartbeat":
+            self.stats["heartbeats"] += 1
             self._last_beat[cid] = time.monotonic()
         elif kind == "task_send":
-            self.conn().execute(
-                "INSERT INTO tasks (queue, payload, created_at)"
-                " VALUES (?,?,?)",
-                (msg["queue"], json.dumps(msg["payload"]), time.time()))
-            self.conn().commit()
-            self._deliver(msg["queue"])
+            self._enqueue_tasks(msg["queue"], [msg["payload"]],
+                                msg.get("submitter"))
+            if msg.get("rid"):
+                # submitter asked for a delivery ack: make the row durable
+                # before confirming (replaces the old fire-and-sleep path)
+                self._commit_now()
+                self._send(cid, {"kind": "rpc_reply", "rid": msg["rid"],
+                                 "result": 1})
+            self._schedule_deliver(msg["queue"])
+        elif kind == "task_send_many":
+            payloads = msg.get("payloads", [])
+            self._enqueue_tasks(msg["queue"], payloads, msg.get("submitter"))
+            if msg.get("rid"):
+                self._commit_now()
+                self._send(cid, {"kind": "rpc_reply", "rid": msg["rid"],
+                                 "result": len(payloads)})
+            self._schedule_deliver(msg["queue"])
         elif kind == "consume":
             self._consumers.setdefault(msg["queue"], set()).add(cid)
+            self._prefetch[cid] = max(1, int(msg.get("prefetch", 1)))
             self._deliver(msg["queue"])
         elif kind == "ack":
-            self.conn().execute(
-                "UPDATE tasks SET state='done' WHERE id=?", (msg["task_id"],))
-            self.conn().commit()
+            self.conn().execute("DELETE FROM tasks WHERE id=?",
+                                (msg["task_id"],))
+            self._maybe_commit()
             # deliver further work to this consumer
             for queue, members in self._consumers.items():
                 if cid in members:
-                    self._deliver(queue)
+                    self._schedule_deliver(queue)
         elif kind == "nack":
             self.conn().execute(
                 "UPDATE tasks SET state='ready', consumer=NULL WHERE id=?",
                 (msg["task_id"],))
-            self.conn().commit()
-            self._deliver(msg["queue"])
+            self._maybe_commit()
+            self._schedule_deliver(msg["queue"])
         elif kind == "rpc_register":
             self._rpc[msg["identifier"]] = cid
         elif kind == "rpc_unregister":
             if self._rpc.get(msg["identifier"]) == cid:
                 del self._rpc[msg["identifier"]]
+        elif kind == "own":
+            # multiplexed process control: one frame claims many pks; the
+            # directory stays O(workers) instead of O(live processes)
+            for pk in msg.get("pks", []):
+                self._owners[int(pk)] = cid
+        elif kind == "disown":
+            for pk in msg.get("pks", []):
+                if self._owners.get(int(pk)) == cid:
+                    del self._owners[int(pk)]
+        elif kind == "subscribe":
+            self._subs.setdefault(cid, set()).update(
+                msg.get("patterns", []))
+        elif kind == "unsubscribe":
+            patterns = msg.get("patterns")
+            if patterns is None:
+                self._subs.pop(cid, None)
+            else:
+                subs = self._subs.get(cid)
+                if subs is not None:
+                    subs.difference_update(patterns)
+                    if not subs:
+                        self._subs.pop(cid, None)
+        elif kind == "sub_sync":
+            # barrier: replying proves every earlier frame on this
+            # connection (e.g. a subscribe) has been processed
+            self._send(cid, {"kind": "rpc_reply", "rid": msg["rid"],
+                             "result": True})
         elif kind == "rpc_lookup":
             # the live-identifier directory: how clients discover which
-            # processes/workers are reachable right now
+            # processes/workers are reachable right now. Owned pks are
+            # synthesized back into per-pk identifiers for compatibility.
             pattern = msg.get("pattern", "*")
+            idents = set(self._rpc)
+            idents.update(f"process.{pk}" for pk in self._owners)
             self._send(cid, {"kind": "rpc_reply", "rid": msg["rid"],
                              "result": sorted(
-                                 i for i in self._rpc
+                                 i for i in idents
                                  if fnmatch.fnmatch(i, pattern))})
         elif kind == "rpc_send":
             target = self._rpc.get(msg["identifier"])
+            if target is None:
+                m = _PROCESS_ID.match(msg["identifier"])
+                if m is not None:
+                    target = self._owners.get(int(m.group(1)))
             if target is None:
                 self._send(cid, {"kind": "rpc_reply", "rid": msg["rid"],
                                  "error": f"no subscriber "
                                           f"{msg['identifier']!r}"})
             else:
-                self._pending_rpc[msg["rid"]] = (cid, target)
-                self._send(target, {"kind": "rpc_request", "rid": msg["rid"],
+                rid = msg["rid"]
+                self._pending_rpc[rid] = (cid, target)
+                timeout = msg.get("timeout")
+                if timeout is not None:
+                    self._rpc_timers[rid] = (
+                        asyncio.get_running_loop().call_later(
+                            float(timeout), self._cancel_rpc, rid))
+                self._send(target, {"kind": "rpc_request", "rid": rid,
                                     "identifier": msg["identifier"],
                                     "msg": msg["msg"]})
         elif kind == "rpc_reply":
+            timer = self._rpc_timers.pop(msg["rid"], None)
+            if timer is not None:
+                timer.cancel()
             origin = self._pending_rpc.pop(msg["rid"], None)
             if origin is not None:
                 self._send(origin[0], msg)
         elif kind == "broadcast":
             seq = self._log_event(msg)
-            for other in list(self._clients):
-                self._send(other, {"kind": "broadcast", "seq": seq,
-                                   "subject": msg["subject"],
-                                   "sender": msg.get("sender"),
-                                   "body": msg.get("body", {})})
+            self._bc_outbox.append({"seq": seq, "subject": msg["subject"],
+                                    "sender": msg.get("sender"),
+                                    "body": msg.get("body", {})})
+            if not self._bc_scheduled:
+                self._bc_scheduled = True
+                asyncio.get_running_loop().call_soon(self._flush_broadcasts)
+        elif kind == "broker_stats":
+            queues: dict[str, dict] = {}
+            for row in self.conn().execute(
+                    "SELECT queue, state, COUNT(*) c FROM tasks"
+                    " GROUP BY queue, state"):
+                queues.setdefault(row["queue"], {})[row["state"]] = row["c"]
+            n_events = self.conn().execute(
+                "SELECT COUNT(*) c FROM events").fetchone()["c"]
+            self._send(cid, {"kind": "rpc_reply", "rid": msg["rid"],
+                             "result": {**self.stats,
+                                        "clients": len(self._clients),
+                                        "owned_pks": len(self._owners),
+                                        "rpc_identifiers": len(self._rpc),
+                                        "event_log_size": n_events,
+                                        "queues": queues}})
         elif kind == "events_since":
             # durable replay: stream the logged events this client missed
             pattern = msg.get("pattern")
@@ -262,6 +408,60 @@ class BrokerServer:
                                  "replay": True})
             self._send(cid, {"kind": "events_caught_up", "seq": last})
 
+    def _cancel_rpc(self, rid: str) -> None:
+        """Deadline enforcement: tell the caller the RPC is cancelled and
+        the (possibly hung) target to abandon the handler."""
+        self._rpc_timers.pop(rid, None)
+        entry = self._pending_rpc.pop(rid, None)
+        if entry is None:
+            return
+        origin, target = entry
+        self.stats["rpc_cancelled"] += 1
+        self._send(origin, {"kind": "rpc_reply", "rid": rid,
+                            "cancelled": True,
+                            "error": "cancelled: rpc deadline exceeded"})
+        self._send(target, {"kind": "rpc_cancel", "rid": rid})
+
+    # -- task ingest -------------------------------------------------------------
+    def _enqueue_tasks(self, queue: str, payloads: list,
+                       submitter: str | None) -> None:
+        now = time.time()
+        rows = []
+        for payload in payloads:
+            sub = submitter
+            if sub is None and isinstance(payload, dict):
+                sub = payload.get("submitter")
+            rows.append((queue, json.dumps(payload), sub or "", now))
+        self.conn().executemany(
+            "INSERT INTO tasks (queue, payload, submitter, created_at)"
+            " VALUES (?,?,?,?)", rows)
+        self.stats["tasks_enqueued"] += len(rows)
+        self._maybe_commit(len(rows))
+
+    # -- broadcast fan-out -------------------------------------------------------
+    def _flush_broadcasts(self) -> None:
+        """Coalesced, subject-filtered fan-out: a burst of broadcasts that
+        arrived in one scheduling tick goes to each interested client as a
+        single ``broadcast_batch`` frame; clients without a matching
+        subscription get nothing at all."""
+        self._bc_scheduled = False
+        events, self._bc_outbox = self._bc_outbox, []
+        if not events:
+            return
+        for cid, patterns in list(self._subs.items()):
+            if cid not in self._clients:
+                continue
+            matched = [ev for ev in events
+                       if any(fnmatch.fnmatch(ev["subject"], p)
+                              for p in patterns)]
+            if not matched:
+                continue
+            if len(matched) == 1:
+                self._send(cid, {"kind": "broadcast", **matched[0]})
+            else:
+                self._send(cid, {"kind": "broadcast_batch",
+                                 "events": matched})
+
     def _log_event(self, msg: dict) -> int:
         """Append a broadcast to the durable event log; returns its seq.
         Commits are batched (every 50 events + the reaper tick): replay
@@ -273,57 +473,162 @@ class BrokerServer:
             (msg["subject"], json.dumps(msg.get("sender")),
              json.dumps(msg.get("body", {})), time.time()))
         seq = cur.lastrowid
-        if seq % 1000 == 0:
-            conn.execute("DELETE FROM events WHERE seq <= ?",
-                         (seq - EVENT_LOG_CAP,))
+        self.stats["events_logged"] += 1
+        every = max(1, min(1000, self.event_log_cap // 4))
+        if seq % every == 0:
+            self._compact_events()
         self._events_uncommitted += 1
         if self._events_uncommitted >= 50:
             conn.commit()
             self._events_uncommitted = 0
         return seq
 
+    def _compact_events(self) -> None:
+        """Shrink the event log to its cap, *least-valuable first*:
+
+        1. superseded ``state_changed`` events of pks that already have a
+           later terminal event (a replaying waiter only needs the
+           terminal one),
+        2. oldest remaining non-terminal events,
+        3. only then — still over cap — oldest terminal notifications.
+        """
+        conn = self.conn()
+        excess = (conn.execute("SELECT COUNT(*) c FROM events").fetchone()
+                  ["c"]) - self.event_log_cap
+        if excess <= 0:
+            return
+        rows = conn.execute(
+            "SELECT seq, subject FROM events ORDER BY seq").fetchall()
+        latest: dict[int, tuple[int, str]] = {}
+        for row in rows:
+            m = _STATE_SUBJECT.match(row["subject"])
+            if m is not None:
+                latest[int(m.group(1))] = (row["seq"], m.group(2))
+        terminal_seqs = {seq for seq, state in latest.values()
+                         if state in _TERMINAL}
+        doomed: list[int] = []
+        superseded_of_terminal = []
+        other_non_terminal = []
+        for row in rows:
+            m = _STATE_SUBJECT.match(row["subject"])
+            if row["seq"] in terminal_seqs:
+                continue
+            pk = int(m.group(1)) if m is not None else None
+            if pk is not None and latest[pk][0] in terminal_seqs:
+                superseded_of_terminal.append(row["seq"])
+            else:
+                other_non_terminal.append(row["seq"])
+        for pool in (superseded_of_terminal, other_non_terminal,
+                     sorted(terminal_seqs)):
+            for seq in pool:
+                if len(doomed) >= excess:
+                    break
+                doomed.append(seq)
+            if len(doomed) >= excess:
+                break
+        conn.executemany("DELETE FROM events WHERE seq=?",
+                         [(s,) for s in doomed])
+        self.stats["events_compacted"] += len(doomed)
+
     # -- delivery ---------------------------------------------------------------------
+    def _schedule_deliver(self, queue: str) -> None:
+        """Debounce: a burst of sends/acks in one tick triggers a single
+        delivery round per queue instead of one O(capacity) pass each."""
+        self._deliver_pending.add(queue)
+        if self._deliver_scheduled:
+            return
+        self._deliver_scheduled = True
+        try:
+            asyncio.get_running_loop().call_soon(self._flush_deliveries)
+        except RuntimeError:
+            self._deliver_scheduled = False
+            self._flush_deliveries()
+
+    def _flush_deliveries(self) -> None:
+        self._deliver_scheduled = False
+        pending, self._deliver_pending = self._deliver_pending, set()
+        for queue in pending:
+            self._deliver(queue)
+
+    def _ready_rows(self, queue: str, limit: int) -> list:
+        """Up to ``limit`` ready rows, FIFO — but interleaved round-robin
+        across distinct submitter ids so one bulk submitter's backlog
+        cannot starve a trickle submitter (fair scheduling)."""
+        conn = self.conn()
+        subs = [r["s"] for r in conn.execute(
+            "SELECT DISTINCT submitter s FROM tasks"
+            " WHERE queue=? AND state='ready'", (queue,))]
+        if len(subs) <= 1:
+            return conn.execute(
+                "SELECT id, payload FROM tasks WHERE queue=? AND"
+                " state='ready' ORDER BY id LIMIT ?",
+                (queue, limit)).fetchall()
+        cursor = self._rr.get(queue, 0) % len(subs)
+        self._rr[queue] = cursor + 1
+        subs = subs[cursor:] + subs[:cursor]
+        per_sub = [conn.execute(
+            "SELECT id, payload FROM tasks WHERE queue=? AND state='ready'"
+            " AND submitter=? ORDER BY id LIMIT ?",
+            (queue, s, limit)).fetchall() for s in subs]
+        out: list = []
+        for batch in itertools.zip_longest(*per_sub):
+            for row in batch:
+                if row is not None:
+                    out.append(row)
+                    if len(out) >= limit:
+                        return out
+        return out
+
     def _deliver(self, queue: str) -> None:
-        consumers = [c for c in self._consumers.get(queue, set())
-                     if c in self._clients]
+        consumers = sorted(c for c in self._consumers.get(queue, set())
+                           if c in self._clients)
         if not consumers:
             return
-        # round-robin ready tasks to consumers with capacity (prefetch=1
-        # per delivery round, like a fair RabbitMQ dispatch)
-        rows = self.conn().execute(
-            "SELECT id, payload FROM tasks WHERE queue=? AND state='ready'"
-            " ORDER BY id", (queue,)).fetchall()
+        conn = self.conn()
         inflight = {
-            r["consumer"]: r["c"] for r in self.conn().execute(
+            r["consumer"]: r["c"] for r in conn.execute(
                 "SELECT consumer, COUNT(*) c FROM tasks WHERE queue=? AND"
                 " state='inflight' GROUP BY consumer", (queue,))}
+        # per-consumer capacity = declared prefetch (the ready-queue
+        # high-water mark) minus what it already holds; anything beyond
+        # total capacity stays parked in the durable queue (backpressure)
+        capacity = {c: max(0, self._prefetch.get(c, 1) - inflight.get(c, 0))
+                    for c in consumers}
+        total = sum(capacity.values())
+        if total <= 0:
+            return
+        rows = self._ready_rows(queue, total)
+        if not rows:
+            return
         ring = itertools.cycle(consumers)
+        delivered = 0
+        now = time.time()
         for row in rows:
             target = None
             for _ in range(len(consumers)):
                 cand = next(ring)
-                if inflight.get(cand, 0) < 1:
+                if capacity.get(cand, 0) > 0:
                     target = cand
                     break
             if target is None:
                 break
-            self.conn().execute(
+            capacity[target] -= 1
+            conn.execute(
                 "UPDATE tasks SET state='inflight', consumer=?, delivered_at=?"
-                " WHERE id=?", (target, time.time(), row["id"]))
-            inflight[target] = inflight.get(target, 0) + 1
+                " WHERE id=?", (target, now, row["id"]))
             self._send(target, {"kind": "task", "queue": queue,
                                 "task_id": row["id"],
                                 "payload": json.loads(row["payload"])})
-        self.conn().commit()
+            delivered += 1
+        self.stats["tasks_delivered"] += delivered
+        self._maybe_commit(delivered)
 
     # -- liveness ----------------------------------------------------------------------
     async def _reaper(self) -> None:
         """Requeue tasks of consumers that missed two heartbeats."""
         while True:
             await asyncio.sleep(self.heartbeat)
-            if self._events_uncommitted:
-                self.conn().commit()
-                self._events_uncommitted = 0
+            self._commit_now()
             deadline = time.monotonic() - 2 * self.heartbeat
             dead = [cid for cid, beat in self._last_beat.items()
                     if beat < deadline]
@@ -344,7 +649,13 @@ class BrokerClient:
 
     Runs its protocol on the caller's event loop; heartbeats are sent from
     a background task so a busy worker still responds (kiwiPy runs a
-    separate thread for the same reason — see paper §III.C.a)."""
+    separate thread for the same reason — see paper §III.C.a).
+
+    Writes are coalesced: frames queued in one scheduling tick leave in a
+    single syscall. Process-control registrations (``process.<pk>``) are
+    *not* sent as per-pk ``rpc_register`` frames — the client keeps the
+    handler locally and claims the pk via a batched ``own`` message, so
+    10k live processes cost the broker one directory entry, not 10k."""
 
     def __init__(self, host: str, port: int):
         self.host = host
@@ -353,9 +664,16 @@ class BrokerClient:
         self._writer: asyncio.StreamWriter | None = None
         self._rpc_handlers: dict[str, Callable] = {}
         self._task_handlers: dict[str, Callable[[dict], Awaitable]] = {}
+        self._task_prefetch: dict[str, int] = {}
         self._broadcast_handlers: dict[int, tuple[str | None, Callable]] = {}
         self._bc_counter = itertools.count()
+        self._bc_patterns: dict[str, int] = {}        # pattern -> refcount
         self._rpc_waiters: dict[str, asyncio.Future] = {}
+        self._rpc_tasks: dict[str, asyncio.Task] = {}
+        self._outbox: list[bytes] = []
+        self._flush_scheduled = False
+        self._pending_own: set[int] = set()
+        self._pending_disown: set[int] = set()
         self._tasks: list[asyncio.Task] = []
         self.heartbeat = 1.0
 
@@ -363,25 +681,79 @@ class BrokerClient:
         self._reader, self._writer = await asyncio.open_connection(
             self.host, self.port)
         # re-register any existing subscriptions (reconnect path)
+        self._pending_disown.clear()
         for identifier in self._rpc_handlers:
-            self._send({"kind": "rpc_register", "identifier": identifier})
+            m = _PROCESS_ID.match(identifier)
+            if m is not None:
+                self._pending_own.add(int(m.group(1)))
+            else:
+                self._send({"kind": "rpc_register", "identifier": identifier})
+        if self._pending_own:
+            self._schedule_flush()
         for queue in self._task_handlers:
-            self._send({"kind": "consume", "queue": queue})
+            self._send({"kind": "consume", "queue": queue,
+                        "prefetch": self._task_prefetch.get(queue, 1)})
+        for pattern in self._bc_patterns:
+            self._send({"kind": "subscribe", "patterns": [pattern]})
         if not self._tasks:
             self._tasks.append(asyncio.ensure_future(self._recv_loop()))
             self._tasks.append(asyncio.ensure_future(self._heartbeat_loop()))
 
+    # -- outgoing frames: write coalescing --------------------------------------
     def _send(self, msg: dict) -> bool:
         """Best-effort write; False when the connection is down (the
         reconnect loop will recover subscriptions, but a caller awaiting
-        a reply must fail fast rather than wait on a message never sent)."""
+        a reply must fail fast rather than wait on a message never sent).
+        Frames are staged in an outbox and flushed once per scheduling
+        tick — many messages per syscall."""
         if self._writer is None or self._writer.is_closing():
             return False
+        self._outbox.append(_encode(msg))
+        self._schedule_flush()
+        return True
+
+    def _schedule_flush(self) -> None:
+        if self._flush_scheduled:
+            return
         try:
-            self._writer.write(json.dumps(msg).encode() + b"\n")
-            return True
+            loop = asyncio.get_running_loop()
+        except RuntimeError:
+            self._flush_outbox()
+            return
+        self._flush_scheduled = True
+        loop.call_soon(self._flush_outbox)
+
+    def _flush_outbox(self) -> None:
+        self._flush_scheduled = False
+        frames: list[bytes] = []
+        if self._pending_own:
+            frames.append(_encode({"kind": "own",
+                                   "pks": sorted(self._pending_own)}))
+            self._pending_own.clear()
+        if self._pending_disown:
+            frames.append(_encode({"kind": "disown",
+                                   "pks": sorted(self._pending_disown)}))
+            self._pending_disown.clear()
+        frames.extend(self._outbox)
+        self._outbox = []
+        if not frames:
+            return
+        writer = self._writer
+        if writer is None or writer.is_closing():
+            return
+        try:
+            writer.write(b"".join(frames))
         except Exception:  # noqa: BLE001 — reconnect loop will recover
-            return False
+            pass
+
+    def _queue_ownership(self, pk: int, owned: bool) -> None:
+        if owned:
+            self._pending_own.add(pk)
+            self._pending_disown.discard(pk)
+        else:
+            self._pending_disown.add(pk)
+            self._pending_own.discard(pk)
+        self._schedule_flush()
 
     async def _heartbeat_loop(self) -> None:
         while True:
@@ -411,6 +783,7 @@ class BrokerClient:
                 if self._writer is not None:
                     self._writer.close()
                 self._reader = self._writer = None
+                self._outbox.clear()
                 waiters, self._rpc_waiters = self._rpc_waiters, {}
                 for fut in waiters.values():
                     if not fut.done():
@@ -423,26 +796,43 @@ class BrokerClient:
             if kind == "task":
                 asyncio.ensure_future(self._run_task(msg))
             elif kind == "rpc_request":
-                await self._run_rpc(msg)
+                # run the handler in its own task: a hung handler must not
+                # wedge this receive loop (and the broker can cancel it)
+                rid = msg["rid"]
+                task = asyncio.ensure_future(self._run_rpc(msg))
+                self._rpc_tasks[rid] = task
+                task.add_done_callback(
+                    lambda _t, rid=rid: self._rpc_tasks.pop(rid, None))
+            elif kind == "rpc_cancel":
+                task = self._rpc_tasks.pop(msg["rid"], None)
+                if task is not None:
+                    task.cancel()
             elif kind == "rpc_reply":
                 fut = self._rpc_waiters.pop(msg["rid"], None)
                 if fut and not fut.done():
-                    if "error" in msg:
+                    if msg.get("cancelled"):
+                        fut.set_exception(TimeoutError(
+                            msg.get("error", "rpc cancelled")))
+                    elif "error" in msg:
                         fut.set_exception(KeyError(msg["error"]))
                     else:
                         fut.set_result(msg.get("result"))
             elif kind == "broadcast":
-                import fnmatch
-                _metrics.get_registry().counter(
-                    "broker.broadcasts_received").inc()
-                for filt, handler in list(self._broadcast_handlers.values()):
-                    if filt and not fnmatch.fnmatch(msg["subject"], filt):
-                        continue
-                    try:
-                        handler(msg["subject"], msg.get("sender"),
-                                msg.get("body", {}))
-                    except Exception:  # noqa: BLE001
-                        logger.exception("broadcast handler failed")
+                self._dispatch_broadcast(msg)
+            elif kind == "broadcast_batch":
+                for event in msg.get("events", []):
+                    self._dispatch_broadcast(event)
+
+    def _dispatch_broadcast(self, msg: dict) -> None:
+        _metrics.get_registry().counter("broker.broadcasts_received").inc()
+        for filt, handler in list(self._broadcast_handlers.values()):
+            if filt and not fnmatch.fnmatch(msg["subject"], filt):
+                continue
+            try:
+                handler(msg["subject"], msg.get("sender"),
+                        msg.get("body", {}))
+            except Exception:  # noqa: BLE001
+                logger.exception("broadcast handler failed")
 
     async def _run_task(self, msg: dict) -> None:
         handler = self._task_handlers.get(msg["queue"])
@@ -469,6 +859,10 @@ class BrokerClient:
                 if asyncio.iscoroutine(res):
                     res = await res
                 reply["result"] = res
+            except asyncio.CancelledError:
+                # broker-side deadline fired: it already answered the
+                # caller with `cancelled`; nothing to reply
+                return
             except Exception as exc:  # noqa: BLE001
                 reply["error"] = repr(exc)
         self._send(reply)
@@ -476,11 +870,19 @@ class BrokerClient:
     # -- Communicator interface ---------------------------------------------------
     def add_rpc_subscriber(self, identifier: str, handler: Callable) -> None:
         self._rpc_handlers[identifier] = handler
-        self._send({"kind": "rpc_register", "identifier": identifier})
+        m = _PROCESS_ID.match(identifier)
+        if m is not None:
+            self._queue_ownership(int(m.group(1)), True)
+        else:
+            self._send({"kind": "rpc_register", "identifier": identifier})
 
     def remove_rpc_subscriber(self, identifier: str) -> None:
         self._rpc_handlers.pop(identifier, None)
-        self._send({"kind": "rpc_unregister", "identifier": identifier})
+        m = _PROCESS_ID.match(identifier)
+        if m is not None:
+            self._queue_ownership(int(m.group(1)), False)
+        else:
+            self._send({"kind": "rpc_unregister", "identifier": identifier})
 
     async def rpc_lookup(self, pattern: str = "*") -> list[str]:
         """Query the broker's live RPC-identifier directory."""
@@ -493,14 +895,33 @@ class BrokerClient:
             raise ConnectionError("broker connection lost")
         return await fut
 
-    async def rpc_send_async(self, identifier: str, msg: dict) -> Any:
+    async def subscription_barrier(self) -> None:
+        """Resolve once every frame already sent on this connection (e.g.
+        a ``subscribe``) has been processed by the broker. Waiters use
+        this to close the subscribe-then-check race under subject-filter
+        pushdown."""
         rid = str(uuid.uuid4())
         fut = asyncio.get_running_loop().create_future()
         self._rpc_waiters[rid] = fut
+        if not self._send({"kind": "sub_sync", "rid": rid}):
+            self._rpc_waiters.pop(rid, None)
+            raise ConnectionError("broker connection lost")
+        await fut
+
+    async def rpc_send_async(self, identifier: str, msg: dict,
+                             timeout: float | None = None) -> Any:
+        rid = str(uuid.uuid4())
+        fut = asyncio.get_running_loop().create_future()
+        self._rpc_waiters[rid] = fut
+        frame = {"kind": "rpc_send", "rid": rid,
+                 "identifier": identifier, "msg": msg}
+        if timeout is not None:
+            # server-side deadline: the broker cancels the handler and
+            # replies `cancelled` (surfaced here as TimeoutError)
+            frame["timeout"] = timeout
         t0 = time.perf_counter()
         with trace.span("broker.rpc", identifier=identifier):
-            if not self._send({"kind": "rpc_send", "rid": rid,
-                               "identifier": identifier, "msg": msg}):
+            if not self._send(frame):
                 self._rpc_waiters.pop(rid, None)
                 raise ConnectionError("broker connection lost")
             result = await fut
@@ -508,17 +929,32 @@ class BrokerClient:
             time.perf_counter() - t0)
         return result
 
-    def rpc_send(self, identifier: str, msg: dict) -> Any:
-        return self.rpc_send_async(identifier, msg)
+    def rpc_send(self, identifier: str, msg: dict,
+                 timeout: float | None = None) -> Any:
+        return self.rpc_send_async(identifier, msg, timeout=timeout)
 
     def add_broadcast_subscriber(self, handler: Callable,
                                  subject_filter: str | None = None) -> int:
         token = next(self._bc_counter)
         self._broadcast_handlers[token] = (subject_filter, handler)
+        pattern = subject_filter or "*"
+        self._bc_patterns[pattern] = self._bc_patterns.get(pattern, 0) + 1
+        if self._bc_patterns[pattern] == 1:
+            # push the filter down: the broker only fans matching events
+            self._send({"kind": "subscribe", "patterns": [pattern]})
         return token
 
     def remove_broadcast_subscriber(self, token: int) -> None:
-        self._broadcast_handlers.pop(token, None)
+        entry = self._broadcast_handlers.pop(token, None)
+        if entry is None:
+            return
+        pattern = entry[0] or "*"
+        count = self._bc_patterns.get(pattern, 0) - 1
+        if count <= 0:
+            self._bc_patterns.pop(pattern, None)
+            self._send({"kind": "unsubscribe", "patterns": [pattern]})
+        else:
+            self._bc_patterns[pattern] = count
 
     def broadcast_send(self, subject: str, sender: Any = None,
                        body: dict | None = None) -> None:
@@ -529,14 +965,31 @@ class BrokerClient:
     def task_send(self, queue: str, payload: dict) -> None:
         self._send({"kind": "task_send", "queue": queue, "payload": payload})
 
+    def task_send_many(self, queue: str, payloads: list[dict],
+                       submitter: str | None = None) -> None:
+        """Enqueue many payloads in one frame (one insert batch + one
+        delivery round server-side)."""
+        self._send({"kind": "task_send_many", "queue": queue,
+                    "payloads": list(payloads), "submitter": submitter})
+
     def add_task_subscriber(self, queue: str,
-                            handler: Callable[[dict], Awaitable]) -> None:
+                            handler: Callable[[dict], Awaitable],
+                            prefetch: int = 1) -> None:
         self._task_handlers[queue] = handler
-        self._send({"kind": "consume", "queue": queue})
+        self._task_prefetch[queue] = max(1, prefetch)
+        self._send({"kind": "consume", "queue": queue,
+                    "prefetch": self._task_prefetch[queue]})
 
     def close(self) -> None:
+        try:
+            self._flush_outbox()
+        except Exception:  # noqa: BLE001
+            pass
         for t in self._tasks:
             t.cancel()
+        for t in list(self._rpc_tasks.values()):
+            t.cancel()
+        self._rpc_tasks.clear()
         if self._writer is not None:
             self._writer.close()
 
@@ -574,7 +1027,7 @@ class SyncBrokerClient:
 
     def _send(self, msg: dict) -> None:
         try:
-            self._sock.sendall(json.dumps(msg).encode() + b"\n")
+            self._sock.sendall(_encode(msg))
         except OSError as exc:
             raise ConnectionError("broker connection lost") from exc
 
@@ -607,6 +1060,13 @@ class SyncBrokerClient:
                 raise ConnectionError("broker closed the connection")
             self._buf += chunk
 
+    def _stash_broadcast(self, msg: dict) -> None:
+        if msg.get("kind") == "broadcast":
+            self._pending.append(msg)
+        elif msg.get("kind") == "broadcast_batch":
+            self._pending.extend({"kind": "broadcast", **event}
+                                 for event in msg.get("events", []))
+
     def _await_reply(self, rid: str, timeout: float) -> Any:
         deadline = time.monotonic() + timeout
         while True:
@@ -614,13 +1074,14 @@ class SyncBrokerClient:
             if msg is None:
                 raise TimeoutError(f"no broker reply within {timeout}s")
             if msg.get("kind") == "rpc_reply" and msg.get("rid") == rid:
+                if msg.get("cancelled"):
+                    raise TimeoutError(msg.get("error", "rpc cancelled"))
                 if "error" in msg:
                     raise KeyError(msg["error"])
                 return msg.get("result")
-            if msg.get("kind") == "broadcast":
-                # e.g. the state change a control intent provoked landing
-                # before its rpc_reply — keep it for the next events() call
-                self._pending.append(msg)
+            # e.g. the state change a control intent provoked landing
+            # before its rpc_reply — keep it for the next events() call
+            self._stash_broadcast(msg)
 
     def _request(self, build_msg, timeout: float) -> Any:
         """Send a request and await its reply; if the broker reaped this
@@ -637,14 +1098,42 @@ class SyncBrokerClient:
                 self._connect()
 
     def rpc(self, identifier: str, msg: dict, timeout: float = 10.0) -> Any:
+        # the broker enforces the deadline server-side (cancelled reply);
+        # the local await gets slack so the server verdict wins the race
         return self._request(
             lambda rid: {"kind": "rpc_send", "rid": rid,
-                         "identifier": identifier, "msg": msg}, timeout)
+                         "identifier": identifier, "msg": msg,
+                         "timeout": timeout}, timeout + 2.0)
 
     def lookup(self, pattern: str = "*", timeout: float = 10.0) -> list[str]:
         return self._request(
             lambda rid: {"kind": "rpc_lookup", "rid": rid,
                          "pattern": pattern}, timeout)
+
+    def task_send(self, queue: str, payload: dict,
+                  submitter: str | None = None,
+                  timeout: float = 30.0) -> int:
+        """Enqueue one task and wait for the broker's durable-delivery
+        ack (replaces the old fire-and-sleep submission path)."""
+        return self._request(
+            lambda rid: {"kind": "task_send", "rid": rid, "queue": queue,
+                         "payload": payload, "submitter": submitter},
+            timeout)
+
+    def task_send_many(self, queue: str, payloads: list[dict],
+                       submitter: str | None = None,
+                       timeout: float = 60.0) -> int:
+        """Enqueue many tasks in one frame; returns the acked count."""
+        payloads = list(payloads)
+        return self._request(
+            lambda rid: {"kind": "task_send_many", "rid": rid,
+                         "queue": queue, "payloads": payloads,
+                         "submitter": submitter}, timeout)
+
+    def broker_stats(self, timeout: float = 10.0) -> dict:
+        """The broker's control-plane traffic counters + queue depths."""
+        return self._request(
+            lambda rid: {"kind": "broker_stats", "rid": rid}, timeout)
 
     def broadcast_send(self, subject: str, sender: Any = None,
                        body: dict | None = None) -> None:
@@ -659,6 +1148,10 @@ class SyncBrokerClient:
         stops after ``timeout`` seconds of total watching (None = forever).
         ``replay_since`` first replays logged events with seq > the given
         value (0 = everything the broker still remembers)."""
+        pattern = subject_filter or "*"
+        # subject-filter pushdown: tell the broker to fan matching live
+        # events to us (without this, it sends nothing at all)
+        self._send({"kind": "subscribe", "patterns": [pattern]})
         if replay_since is not None:
             self._send({"kind": "events_since", "seq": replay_since,
                         "pattern": subject_filter})
@@ -669,29 +1162,40 @@ class SyncBrokerClient:
         # long-lived watches)
         seen: set[int] = set()
         replaying = replay_since is not None
-        while True:
-            if self._pending:
-                msg = self._pending.pop(0)
-            else:
-                msg = self._recv(deadline)
-            if msg is None:
-                return
-            if msg.get("kind") == "events_caught_up":
-                replaying = False
-                seen.clear()
-                continue
-            if msg.get("kind") != "broadcast":
-                continue
-            seq = msg.get("seq")
-            if replaying and seq is not None:
-                if seq in seen:
+        try:
+            while True:
+                if self._pending:
+                    msg = self._pending.pop(0)
+                else:
+                    msg = self._recv(deadline)
+                if msg is None:
+                    return
+                if msg.get("kind") == "events_caught_up":
+                    replaying = False
+                    seen.clear()
                     continue
-                seen.add(seq)
-            subject = msg["subject"]
-            if subject_filter and not fnmatch.fnmatch(subject,
-                                                      subject_filter):
-                continue
-            yield subject, msg.get("sender"), msg.get("body", {})
+                if msg.get("kind") == "broadcast_batch":
+                    self._pending = [
+                        {"kind": "broadcast", **event}
+                        for event in msg.get("events", [])] + self._pending
+                    continue
+                if msg.get("kind") != "broadcast":
+                    continue
+                seq = msg.get("seq")
+                if replaying and seq is not None:
+                    if seq in seen:
+                        continue
+                    seen.add(seq)
+                subject = msg["subject"]
+                if subject_filter and not fnmatch.fnmatch(subject,
+                                                          subject_filter):
+                    continue
+                yield subject, msg.get("sender"), msg.get("body", {})
+        finally:
+            try:
+                self._send({"kind": "unsubscribe", "patterns": [pattern]})
+            except ConnectionError:
+                pass
 
     def close(self) -> None:
         try:

@@ -101,7 +101,10 @@ class LocalCommunicator:
     def remove_rpc_subscriber(self, identifier: str) -> None:
         self._rpc.pop(identifier, None)
 
-    def rpc_send(self, identifier: str, msg: dict) -> Any:
+    def rpc_send(self, identifier: str, msg: dict,
+                 timeout: float | None = None) -> Any:
+        # ``timeout`` is interface parity with the broker clients; a local
+        # handler is a direct call, so there is nothing to dead-line
         handler = self._rpc.get(identifier)
         if handler is None:
             raise KeyError(f"no RPC subscriber for {identifier!r}")
@@ -148,7 +151,19 @@ class LocalCommunicator:
     def task_send(self, queue: str, payload: dict) -> None:
         self._queue(queue).put_nowait(payload)
 
-    def add_task_subscriber(self, queue: str, handler: TaskHandler) -> None:
+    def task_send_many(self, queue: str, payloads: list[dict],
+                       submitter: str | None = None) -> None:
+        """Batch enqueue (interface parity with the broker clients; in
+        process there is no syscall to amortize)."""
+        q = self._queue(queue)
+        for payload in payloads:
+            q.put_nowait(payload)
+
+    def add_task_subscriber(self, queue: str, handler: TaskHandler,
+                            prefetch: int | None = None) -> None:
+        if prefetch is not None:
+            # per-queue override of the global prefetch bound
+            self._prefetch.setdefault(queue, asyncio.Semaphore(prefetch))
         self._subscribers.setdefault(queue, []).append(handler)
         self._subscribed_event(queue).set()
         if queue not in self._consumers:

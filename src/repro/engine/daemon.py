@@ -29,6 +29,11 @@ logger = logging.getLogger("repro.engine.daemon")
 
 PROCESS_QUEUE = "process.queue"
 
+#: pickup latency can legitimately reach minutes when 100k tasks queue
+#: behind 10k live slots — extend the default buckets so p99 stays
+#: computable at saturation
+PICKUP_BUCKETS = _metrics.DEFAULT_BUCKETS + (60.0, 120.0, 300.0, 600.0)
+
 
 # ---------------------------------------------------------------------------
 # Worker main
@@ -49,29 +54,49 @@ def make_process_task_handler(runner, store, owned: set | None = None):
         sent_ts = payload.get("ts")
         if sent_ts is not None:
             # submit→pickup latency: how long the task sat in the queue
-            registry.histogram("daemon.pickup_seconds").observe(
+            registry.histogram("daemon.pickup_seconds",
+                               buckets=PICKUP_BUCKETS).observe(
                 max(0.0, time.time() - sent_ts))
-        checkpoint = store.load_checkpoint(pk)
-        if checkpoint is None:
-            node = store.get_node(pk, columns=SUMMARY_COLUMNS)
-            if node and node.get("process_state") in TERMINAL:
-                return  # duplicate delivery of a finished process
-            raise RuntimeError(f"no checkpoint for process {pk}")
-        with trace.span("daemon.resume", pk=pk):
-            process = Process.recreate_from_checkpoint(checkpoint,
-                                                       runner=runner)
-        if owned is not None:
-            owned.add(pk)
-        try:
-            # step_until_terminated registers process.<pk> RPC itself and
-            # honours a durably-recorded kill before doing any work
-            with obs_logs.pk_context(pk):
-                await process.step_until_terminated()
-        finally:
+        # slot-gate BEFORE materializing the Process: tasks delivered
+        # beyond the slot count wait here as pk-only payloads, so resident
+        # Process objects (checkpoint, inputs, namespaces) stay bounded by
+        # the slot count — worker RSS does not grow with the backlog
+        async with runner._sem():
+            checkpoint = store.load_checkpoint(pk)
+            if checkpoint is None:
+                node = store.get_node(pk, columns=SUMMARY_COLUMNS)
+                if node and node.get("process_state") in TERMINAL:
+                    return  # duplicate delivery of a finished process
+                raise RuntimeError(f"no checkpoint for process {pk}")
+            with trace.span("daemon.resume", pk=pk):
+                process = Process.recreate_from_checkpoint(checkpoint,
+                                                           runner=runner)
             if owned is not None:
-                owned.discard(pk)
+                owned.add(pk)
+            registry.gauge("daemon.resident_processes").inc()
+            try:
+                # step_until_terminated registers process.<pk> RPC itself
+                # and honours a durably-recorded kill before doing any work
+                with obs_logs.pk_context(pk):
+                    await process.step_until_terminated()
+            finally:
+                registry.gauge("daemon.resident_processes").dec()
+                if owned is not None:
+                    owned.discard(pk)
 
     return handle
+
+
+def _rss_kb() -> int:
+    """This process's resident set size in kB (0 where /proc is absent)."""
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1])
+    except (OSError, ValueError, IndexError):
+        pass
+    return 0
 
 
 def _worker_main(broker_host: str, broker_port: int, store_path: str,
@@ -104,10 +129,14 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
             worker_id,
             lambda msg: {"worker": worker_id, "pid": os.getpid(),
                          "slots": slots, "pks": sorted(owned),
+                         "resident": len(owned), "rss_kb": _rss_kb(),
                          "metrics": _metrics.get_registry().snapshot()})
 
+        # prefetch = slots: the broker parks anything beyond the worker's
+        # concurrency in the durable queue (ready-queue high-water mark)
         client.add_task_subscriber(
-            PROCESS_QUEUE, make_process_task_handler(runner, store, owned))
+            PROCESS_QUEUE, make_process_task_handler(runner, store, owned),
+            prefetch=slots)
         if crash_after is not None:
             # fault-injection for tests: die hard mid-work
             await asyncio.sleep(crash_after + random.random() * 0.1)
@@ -118,13 +147,14 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
     asyncio.run(main())
 
 
-def _broker_main(db_path: str, port_file: str) -> None:
+def _broker_main(db_path: str, port_file: str,
+                 heartbeat: float = 1.0) -> None:
     from repro.engine.broker import BrokerServer
 
     obs_logs.configure()
 
     async def main() -> None:
-        server = BrokerServer(db_path, heartbeat=1.0)
+        server = BrokerServer(db_path, heartbeat=heartbeat)
         host, port = await server.start()
         with open(port_file, "w") as fh:
             json.dump({"host": host, "port": port}, fh)
@@ -141,7 +171,8 @@ def _broker_main(db_path: str, port_file: str) -> None:
 class Daemon:
     def __init__(self, workdir: str, *, workers: int = 2, slots: int = 50,
                  store_path: str | None = None,
-                 crash_after: float | None = None):
+                 crash_after: float | None = None,
+                 heartbeat: float = 1.0):
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
         self.store_path = store_path or os.path.join(workdir, "provenance.db")
@@ -150,18 +181,26 @@ class Daemon:
         self.n_workers = workers
         self.slots = slots
         self.crash_after = crash_after
+        # liveness window: a worker missing 2x this is presumed dead and
+        # its in-flight tasks requeued. Raise it for saturation workloads
+        # where thousands of simultaneous resumes can starve a worker's
+        # heartbeat task for seconds without the worker being dead.
+        self.heartbeat = heartbeat
         self._ctx = mp.get_context("spawn")
         self._broker_proc: mp.Process | None = None
         self._workers: list[mp.Process] = []
         self.host: str | None = None
         self.port: int | None = None
+        self._submit_client = None
+        self.submitter_id = f"daemon-{os.getpid()}"
 
     # -- lifecycle ---------------------------------------------------------------
     def start(self, timeout: float = 20.0) -> None:
         if os.path.exists(self.port_file):
             os.unlink(self.port_file)
         self._broker_proc = self._ctx.Process(
-            target=_broker_main, args=(self.broker_db, self.port_file),
+            target=_broker_main,
+            args=(self.broker_db, self.port_file, self.heartbeat),
             daemon=True)
         self._broker_proc.start()
         t0 = time.time()
@@ -206,7 +245,14 @@ class Daemon:
             p.terminate()
         self.n_workers = n
 
+    def worker_pids(self) -> list[int]:
+        """OS pids of the live worker processes (e.g. for RSS sampling)."""
+        return [p.pid for p in self._workers if p.is_alive()]
+
     def stop(self) -> None:
+        if self._submit_client is not None:
+            self._submit_client.close()
+            self._submit_client = None
         for p in self._workers:
             p.terminate()
         if self._broker_proc is not None:
@@ -235,14 +281,34 @@ class Daemon:
         self.send_task(pk)
         return pk
 
-    def send_task(self, pk: int) -> None:
-        import socket
+    def _submitter(self):
+        """One persistent broker connection for all submissions (the old
+        path opened a fresh socket and slept 50 ms per task)."""
+        if self._submit_client is None:
+            from repro.engine.broker import SyncBrokerClient
+            self._submit_client = SyncBrokerClient(self.host, self.port)
+        return self._submit_client
 
-        msg = json.dumps({"kind": "task_send", "queue": PROCESS_QUEUE,
-                          "payload": {"pk": pk, "ts": time.time()}}) + "\n"
-        with socket.create_connection((self.host, self.port), timeout=10) as s:
-            s.sendall(msg.encode())
-            time.sleep(0.05)
+    def send_task(self, pk: int) -> None:
+        """Ship one pk through the durable queue; returns once the broker
+        acks the durable enqueue (no sleep, no per-task socket)."""
+        self._submitter().task_send(
+            PROCESS_QUEUE, {"pk": pk, "ts": time.time()},
+            submitter=self.submitter_id)
+
+    def send_tasks(self, pks, chunk: int = 1000) -> int:
+        """Batch-ship many pks: ``task_send_many`` frames of ``chunk``
+        payloads, each acked as one durable insert. Returns the count."""
+        client = self._submitter()
+        pks = list(pks)
+        sent = 0
+        for i in range(0, len(pks), chunk):
+            now = time.time()
+            sent += client.task_send_many(
+                PROCESS_QUEUE,
+                [{"pk": pk, "ts": now} for pk in pks[i:i + chunk]],
+                submitter=self.submitter_id)
+        return sent
 
     def controller(self):
         """A synchronous control-plane client for this daemon's broker

@@ -64,6 +64,9 @@ class Runner:
         # often a waiter double-checks the store in case the owning worker
         # crashed without broadcasting a terminal state
         self.liveness_interval = liveness_interval
+        # distinct submitter ids get fair (round-robin) dispatch at the
+        # broker; None folds into the anonymous submitter lane
+        self.submitter_id: str | None = None
         self.logger = logger
         self._processes: dict[int, ProcessHandle] = {}
         self._slot_sem: asyncio.Semaphore | None = None
@@ -112,9 +115,12 @@ class Runner:
             _metrics.get_registry().counter("engine.submits").inc()
             if getattr(self, "distributed", False):
                 from repro.engine.daemon import PROCESS_QUEUE
-                # "ts" lets the picking worker measure queue latency
-                self.communicator.task_send(
-                    PROCESS_QUEUE, {"pk": process.pk, "ts": time.time()})
+                # "ts" lets the picking worker measure queue latency;
+                # "submitter" feeds the broker's fair-dispatch rotation
+                payload = {"pk": process.pk, "ts": time.time()}
+                if self.submitter_id is not None:
+                    payload["submitter"] = self.submitter_id
+                self.communicator.task_send(PROCESS_QUEUE, payload)
                 return QueuedHandle(process.pk)
             return self._schedule(process)
 
@@ -206,6 +212,13 @@ class Runner:
         token = self.communicator.add_broadcast_subscriber(
             on_broadcast, subject_filter=f"state_changed.{pk}.*")
         try:
+            # with server-side filter pushdown the subscription is only
+            # effective once the broker has processed it — barrier first,
+            # then check the store, so no terminal event can fall between
+            barrier = getattr(self.communicator, "subscription_barrier",
+                              None)
+            if barrier is not None:
+                await barrier()
             node = self.store.get_node(pk, columns=SUMMARY_COLUMNS)
             if node and node.get("process_state") in TERMINAL:
                 return
