@@ -13,6 +13,12 @@ contract, not a hope. Two metrics:
                           timeline persistence on, as a ratio over the
                           disabled run. Reported (not asserted): tracing
                           is opt-in, you pay only when you ask.
+  O3 disabled faults    — cost of a disabled chaos `fault_point()` call
+                          (docs/chaos.md). The seams sit on the same
+                          hot paths as the tracer's spans, so the same
+                          < 5% contract applies (asserted in --smoke
+                          against the per-process engine time at the
+                          tracer's spans-per-process density).
 
 Usage:
     python benchmarks/obs_bench.py                # full N, prints json
@@ -51,6 +57,20 @@ def bench_disabled_span_cost(n: int = 200_000) -> float:
     return (time.perf_counter() - t0) / n
 
 
+def bench_disabled_fault_point_cost(n: int = 200_000) -> float:
+    """Per-call cost (seconds) of a disabled chaos fault_point()."""
+    from repro.chaos import faults
+
+    faults.deactivate()
+    fault_point = faults.fault_point
+    for _ in range(1000):
+        fault_point("store.commit.pre")
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fault_point("store.commit.pre")
+    return (time.perf_counter() - t0) / n
+
+
 def _engine_run(n_processes: int) -> float:
     """Per-process wall time of the B1-style engine throughput run."""
     import engine_bench
@@ -84,6 +104,7 @@ def count_spans_per_process() -> int:
 
 def run_all(n_processes: int) -> dict:
     span_cost = bench_disabled_span_cost()
+    fault_cost = bench_disabled_fault_point_cost()
     spans_per_proc = count_spans_per_process()
 
     trace.disable()
@@ -101,8 +122,13 @@ def run_all(n_processes: int) -> dict:
     # on the hot path, the disabled-tracer dispatch cost per process is a
     # negligible fraction of what the engine spends per process
     disabled_pct = span_cost * spans_per_proc / t_disabled * 100
+    # same density assumption for the chaos seams: ~spans-per-process
+    # fault points on the hot path (in truth there are fewer)
+    fault_pct = fault_cost * spans_per_proc / t_disabled * 100
     return {
         "disabled_span_ns": round(span_cost * 1e9, 1),
+        "disabled_fault_point_ns": round(fault_cost * 1e9, 1),
+        "disabled_fault_overhead_pct": round(fault_pct, 4),
         "spans_per_process": spans_per_proc,
         "engine_us_per_process_disabled": round(t_disabled * 1e6, 1),
         "engine_us_per_process_enabled": round(t_enabled * 1e6, 1),
@@ -130,9 +156,14 @@ def main(argv=None) -> None:
         pct = results["disabled_overhead_pct"]
         assert pct < 5.0, \
             f"O1 bar: disabled tracer costs {pct:.2f}% of engine time (>=5%)"
+        fpct = results["disabled_fault_overhead_pct"]
+        assert fpct < 5.0, \
+            f"O3 bar: disabled fault points cost {fpct:.2f}% of engine time"
         print(f"smoke OK: disabled overhead {pct:.4f}% "
               f"({results['spans_per_process']} spans/process, "
-              f"{results['disabled_span_ns']}ns/span)")
+              f"{results['disabled_span_ns']}ns/span); disabled "
+              f"fault_point {results['disabled_fault_point_ns']}ns "
+              f"({fpct:.4f}%)")
 
     if args.out:
         with open(args.out, "w") as fh:

@@ -38,6 +38,12 @@ class HandlerReport:
 class BaseRestartWorkChain(WorkChain):
     _process_class: type | None = None
 
+    #: synthetic exit status for a child that died without recording one
+    #: (excepted or killed — e.g. its worker was chaos-killed mid-step and
+    #: a durable kill landed). Handlers register for it like any real
+    #: status, so dead children can be retried instead of read as success.
+    EXIT_STATUS_DIED = 999
+
     @classmethod
     def define(cls, spec: ProcessSpec) -> None:
         super().define(spec)
@@ -82,6 +88,10 @@ class BaseRestartWorkChain(WorkChain):
     def inspect_process(self):
         child = self.ctx.children[-1]
         status = child.exit_status or 0
+        if status == 0 and child.process_state != "finished":
+            # no exit code was ever recorded: the child excepted or was
+            # killed — that must not read as success
+            status = self.EXIT_STATUS_DIED
         if status == 0:
             self.ctx.is_finished = True
             return None

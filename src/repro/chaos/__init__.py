@@ -1,0 +1,29 @@
+"""Chaos subsystem: deterministic fault injection for the engine.
+
+The paper's headline claim is robustness — processes that survive worker
+crashes, broker partitions and duplicated deliveries. This package is how
+the repo *proves* it instead of asserting it:
+
+* :mod:`repro.chaos.faults` — the fault-point registry. Hot paths in the
+  store, the engine and the broker call ``fault_point("<seam>")`` at
+  every paper-claimed failure window; a seeded :class:`ChaosPlan`
+  (programmatic or via the ``REPRO_CHAOS`` env spec) decides whether a
+  hit crashes the process, raises, delays, or asks the seam to
+  duplicate/drop a frame. Disabled, a fault point is one module-global
+  load and a ``None`` check — cheap enough to stay threaded through the
+  hot paths permanently, like the tracer's no-op span.
+* :mod:`repro.chaos.harness` — the scenario runner: spawns a real daemon
+  (broker + workers as OS processes), kill -9's workers mid-step, crashes
+  inside store transactions, partitions broadcast fan-out, duplicates
+  task delivery, then supervises restarts until the workload drains.
+* :mod:`repro.chaos.invariants` — the post-chaos verifier: zero lost /
+  duplicated / resurrected processes and a consistent provenance graph.
+
+Only :mod:`faults` is imported here — the instrumented layers (store,
+broker, process) import this package, so it must not pull the engine in.
+"""
+
+from repro.chaos.faults import (  # noqa: F401
+    CATALOG, ChaosInjected, ChaosPlan, activate, active_plan, deactivate,
+    fault_point, reset,
+)

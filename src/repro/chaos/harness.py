@@ -1,0 +1,302 @@
+"""Chaos scenario runner: real daemon workers, real kill -9, real faults.
+
+Each scenario spawns an actual :class:`repro.engine.daemon.Daemon` (broker
+process + worker OS processes), submits checkpoint-heavy workloads, then
+hurts the system in a seeded, reproducible way:
+
+* ``REPRO_CHAOS`` is exported before the daemon starts, so every spawned
+  child (broker and workers) arms the same deterministic fault plan while
+  the harness process itself stays disarmed (`faults.deactivate()`).
+* SIGKILLs are scheduled from ``random.Random(seed)`` — same seed, same
+  kill times, same victim indices.
+* Durable kills follow the CLI pattern: write the ``kill_requested``
+  marker first, then best-effort the live RPC.
+
+The daemon supervisor restarts dead workers; after ``heal_restarts``
+restarts the harness pops ``REPRO_CHAOS`` from the environment so
+replacement workers come up clean and the system can drain. When every
+submitted pk is terminal (or the timeout passes), the invariant checker
+judges the store.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import random
+import tempfile
+import time
+from dataclasses import dataclass, field
+
+from repro.chaos import faults
+from repro.chaos.invariants import InvariantReport, check_store
+from repro.engine.runner import TERMINAL
+
+__all__ = ["Scenario", "ScenarioResult", "SCENARIOS", "run_scenario",
+           "list_scenarios"]
+
+
+@dataclass
+class Scenario:
+    name: str
+    description: str
+    #: fault clauses (without the seed= prefix); None = no injected faults
+    chaos: str | None = None
+    workload: str = "calc"  # "calc" | "chain"
+    n: int = 4
+    steps: int = 4
+    pause: float = 0.1
+    children: int = 2  # chain workload: children per chain
+    workers: int = 2
+    slots: int = 10
+    #: SIGKILL schedule: ``sigkills`` kills at seeded times in the window
+    sigkills: int = 0
+    sigkill_window: tuple[float, float] = (0.4, 2.5)
+    #: durable kill_requested markers written against this many pks
+    durable_kills: int = 0
+    kill_at: float = 0.4
+    #: pop REPRO_CHAOS after this many worker restarts so the system heals
+    heal_restarts: int | None = None
+    env: dict = field(default_factory=dict)
+    timeout: float = 90.0
+    #: scenario-level expectations, checked on top of the invariants
+    expect_restarts: bool = False
+    expect_stats: dict = field(default_factory=dict)
+    expect_killed: bool = False
+
+
+@dataclass
+class ScenarioResult:
+    name: str
+    seed: int
+    workdir: str
+    report: InvariantReport
+    restarts: int
+    broker_stats: dict
+    states: dict
+    elapsed: float
+    failures: list = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return self.report.ok and not self.failures
+
+    def summary(self) -> str:
+        head = "PASS" if self.ok else "FAIL"
+        lines = [
+            f"scenario {self.name!r} seed={self.seed}: {head} "
+            f"({self.elapsed:.1f}s, {self.restarts} worker restarts)",
+            self.report.summary(),
+        ]
+        for key in ("chaos_duplicated", "chaos_dropped", "clients_dropped",
+                    "tasks_delivered"):
+            if key in self.broker_stats:
+                lines.append(f"broker {key:<17}: {self.broker_stats[key]}")
+        for f in self.failures:
+            lines.append(f"  - [scenario] {f}")
+        return "\n".join(lines)
+
+
+SCENARIOS: dict[str, Scenario] = {s.name: s for s in [
+    Scenario(
+        name="kill9-midstep",
+        description="SIGKILL live workers mid-step; supervisor restarts "
+                    "them and replacements resume from checkpoints.",
+        n=6, steps=6, pause=0.15,
+        sigkills=3, sigkill_window=(0.5, 2.5),
+        expect_restarts=True),
+    Scenario(
+        name="crash-in-txn",
+        description="Worker dies inside a store transaction (just before "
+                    "commit); WAL rollback + redelivery must leave no "
+                    "half-written provenance.",
+        chaos="store.commit.pre:crash:nth=3",
+        n=4, steps=5, pause=0.1,
+        heal_restarts=2, expect_restarts=True),
+    Scenario(
+        name="crash-before-ack",
+        description="Worker finishes a process (terminal state durable) "
+                    "but dies before acking the task; the redelivered "
+                    "task must be recognised as already finished.",
+        chaos="broker.ack.pre:crash:nth=1",
+        n=3, steps=3, pause=0.08,
+        heal_restarts=2, expect_restarts=True),
+    Scenario(
+        name="dup-delivery",
+        description="Broker hands the same task frame over twice "
+                    "(at-least-once transport); outputs must still land "
+                    "exactly once.",
+        chaos="broker.deliver.pre:duplicate:nth=2;"
+              "broker.deliver.pre:duplicate:p=0.4,max=4",
+        n=6, steps=3, pause=0.08,
+        expect_stats={"chaos_duplicated": 1}),
+    Scenario(
+        name="broker-partition",
+        description="Terminal broadcasts dropped while workchain parents "
+                    "wait on children; the liveness re-check must wake "
+                    "the parents anyway.",
+        chaos="broker.broadcast.pre:drop:nth=1;"
+              "broker.broadcast.pre:drop:p=0.5,max=5",
+        workload="chain", n=2, steps=3, pause=0.08, children=2,
+        env={"REPRO_LIVENESS_INTERVAL": "1.0"},
+        expect_stats={"chaos_dropped": 1}),
+    Scenario(
+        name="kill-during-crash",
+        description="Durable kill requests race worker crashes; the kill "
+                    "marker must survive the restart and land.",
+        chaos="process.flush.post:crash:nth=4",
+        n=4, steps=10, pause=0.2,
+        durable_kills=2, kill_at=0.4,
+        heal_restarts=2, expect_restarts=True, expect_killed=True),
+    Scenario(
+        name="slow-io",
+        description="Injected latency on store and broker commits; "
+                    "everything still completes, just slower.",
+        chaos="store.commit.pre:delay:delay=0.03,p=0.5;"
+              "broker.commit.pre:delay:delay=0.02,p=0.3",
+        n=4, steps=3, pause=0.05),
+]}
+
+
+def list_scenarios() -> list[Scenario]:
+    return list(SCENARIOS.values())
+
+
+def _poll_states(store, pks) -> dict:
+    qs = ",".join("?" for _ in pks)
+    with store._lock:
+        rows = store._conn().execute(
+            f"SELECT pk, process_state FROM nodes WHERE pk IN ({qs})",
+            list(pks)).fetchall()
+    return {r["pk"]: r["process_state"] for r in rows}
+
+
+def run_scenario(name: str, seed: int = 1,
+                 workdir: str | None = None) -> ScenarioResult:
+    """Run one named scenario end to end and return its judged result."""
+    from repro.chaos.workloads import ChaosCalc, ChaosChain
+    from repro.core import Float, Int
+    from repro.engine.daemon import Daemon
+    from repro.provenance.store import configure_store
+
+    sc = SCENARIOS[name]
+    rng = random.Random(seed)
+    workdir = workdir or tempfile.mkdtemp(prefix=f"chaos-{name}-")
+
+    # the harness process must never trip its own seams — only spawned
+    # daemon children re-resolve the plan from the environment
+    faults.deactivate()
+    saved_env = {}
+    env = dict(sc.env)
+    if sc.chaos:
+        env[faults.ENV_VAR] = f"seed={seed};{sc.chaos}"
+    for key, value in env.items():
+        saved_env[key] = os.environ.get(key)
+        os.environ[key] = value
+
+    t0 = time.time()
+    daemon = Daemon(workdir, workers=sc.workers, slots=sc.slots,
+                    heartbeat=0.5)
+    restarts = 0
+    broker_stats: dict = {}
+    states: dict = {}
+    failures: list[str] = []
+    try:
+        daemon.start()
+        store = configure_store(daemon.store_path)
+
+        pks = []
+        for _ in range(sc.n):
+            if sc.workload == "chain":
+                pks.append(daemon.submit(ChaosChain, {
+                    "n": Int(sc.children), "steps": Int(sc.steps),
+                    "pause": Float(sc.pause)}))
+            else:
+                pks.append(daemon.submit(ChaosCalc, {
+                    "steps": Int(sc.steps), "pause": Float(sc.pause)}))
+
+        # seeded schedules, fixed before the loop: reproducibility means
+        # the same seed produces the same kill times and victims
+        lo, hi = sc.sigkill_window
+        sigkill_plan = sorted(
+            (t0 + rng.uniform(lo, hi), rng.randrange(1000))
+            for _ in range(sc.sigkills))
+        kill_pks = rng.sample(pks, sc.durable_kills) if sc.durable_kills else []
+        kill_deadline = t0 + sc.kill_at
+        kills_done = False
+        armed = sc.chaos is not None
+
+        deadline = t0 + sc.timeout
+        pending = set(pks)
+        while time.time() < deadline:
+            restarts += daemon.supervise()
+            if (armed and sc.heal_restarts is not None
+                    and restarts >= sc.heal_restarts):
+                # replacement workers from here on spawn clean — the
+                # system must now drain to quiescence
+                os.environ.pop(faults.ENV_VAR, None)
+                armed = False
+            now = time.time()
+            while sigkill_plan and now >= sigkill_plan[0][0]:
+                _, victim = sigkill_plan.pop(0)
+                live = daemon.worker_pids()
+                if live and pending:
+                    os.kill(live[victim % len(live)], signal.SIGKILL)
+            if kill_pks and not kills_done and now >= kill_deadline:
+                kills_done = True
+                from repro.engine.controller import ProcessController
+                controller = ProcessController(daemon.host, daemon.port,
+                                               timeout=2.0)
+                for pk in kill_pks:
+                    # durable-first (CLI pattern): marker lands even if no
+                    # worker currently owns the process
+                    store.update_process(
+                        pk, attributes={"kill_requested": "chaos kill"})
+                    try:
+                        controller.kill(pk, "chaos kill")
+                    except Exception:  # noqa: BLE001 - worker may be dead
+                        pass
+            states = _poll_states(store, pks)
+            pending = {pk for pk in pks
+                       if states.get(pk) not in TERMINAL}
+            if not pending:
+                break
+            time.sleep(0.25)
+
+        if pending:
+            failures.append(
+                f"timeout: {len(pending)} of {len(pks)} processes never "
+                f"reached a terminal state: {sorted(pending)}")
+        try:
+            broker_stats = daemon._submitter().broker_stats()
+        except Exception:  # noqa: BLE001 - broker may have been killed
+            broker_stats = {}
+    finally:
+        daemon.stop()
+        for key, value in saved_env.items():
+            if value is None:
+                os.environ.pop(key, None)
+            else:
+                os.environ[key] = value
+        faults.reset()
+
+    # judge: global invariants first, then scenario-level expectations
+    report = check_store(store, expected_pks=pks)
+    if sc.expect_restarts and restarts < 1:
+        failures.append("expected at least one worker restart; saw none")
+    for key, minimum in sc.expect_stats.items():
+        if broker_stats.get(key, 0) < minimum:
+            failures.append(
+                f"expected broker stat {key} >= {minimum}, "
+                f"got {broker_stats.get(key, 0)}")
+    if sc.expect_killed:
+        killed = [pk for pk in kill_pks if states.get(pk) == "killed"]
+        if not killed:
+            failures.append(
+                f"expected durably-killed pks {kill_pks} to end in state "
+                f"'killed'; states: { {pk: states.get(pk) for pk in kill_pks} }")
+
+    return ScenarioResult(
+        name=name, seed=seed, workdir=workdir, report=report,
+        restarts=restarts, broker_stats=broker_stats, states=states,
+        elapsed=time.time() - t0, failures=failures)

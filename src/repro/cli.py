@@ -23,6 +23,13 @@ Control-plane verbs (the event-driven engine surface):
     repro -p <profile.db> process watch [--pk PK] [--once] [--timeout T]
     repro -p <profile.db> process top [--once] [--interval S]
 
+Chaos engineering (docs/chaos.md):
+
+    repro chaos list
+    repro chaos points
+    repro chaos run --scenario kill9-midstep --seed 1 [--json]
+    repro -p <profile.db> chaos check [--pk PK --expect-terminal]
+
 Observability (docs/observability.md): `stats --json` merges the node
 counts with the metrics snapshots advertised by every daemon worker;
 `process top` is the live worker/process table; `process report <pk>`
@@ -605,6 +612,59 @@ def cmd_archive_import(store: ProvenanceStore, args) -> None:
               "or content-equivalent)")
 
 
+# ---------------------------------------------------------------------------
+# chaos (docs/chaos.md)
+# ---------------------------------------------------------------------------
+
+def cmd_chaos_run(store: ProvenanceStore, args) -> None:
+    from repro.chaos.harness import SCENARIOS, run_scenario
+
+    if args.scenario not in SCENARIOS:
+        sys.exit(f"unknown scenario {args.scenario!r}; "
+                 f"try: {', '.join(sorted(SCENARIOS))}")
+    result = run_scenario(args.scenario, seed=args.seed,
+                          workdir=args.workdir)
+    if args.json:
+        print(json.dumps({
+            "scenario": result.name, "seed": result.seed, "ok": result.ok,
+            "restarts": result.restarts, "elapsed": result.elapsed,
+            "states": {str(k): v for k, v in result.states.items()},
+            "violations": [str(v) for v in result.report.violations],
+            "failures": result.failures,
+            "broker_stats": result.broker_stats,
+            "workdir": result.workdir}, indent=2))
+    else:
+        print(result.summary())
+    if not result.ok:
+        sys.exit(1)
+
+
+def cmd_chaos_list(store: ProvenanceStore, args) -> None:
+    from repro.chaos.harness import list_scenarios
+
+    for sc in list_scenarios():
+        print(f"{sc.name:<20} {sc.description}")
+        if sc.chaos:
+            print(f"{'':<20} faults: {sc.chaos}")
+
+
+def cmd_chaos_points(store: ProvenanceStore, args) -> None:
+    from repro.chaos.faults import CATALOG
+
+    for name, desc in sorted(CATALOG.items()):
+        print(f"{name:<24} {desc}")
+
+
+def cmd_chaos_check(store: ProvenanceStore, args) -> None:
+    from repro.chaos.invariants import check_store
+
+    report = check_store(store, expected_pks=args.pk or None,
+                         expect_terminal=args.expect_terminal)
+    print(report.summary())
+    if not report.ok:
+        sys.exit(1)
+
+
 def cmd_cache_invalidate(store: ProvenanceStore, args) -> None:
     from repro.caching.registry import CacheRegistry
 
@@ -727,6 +787,25 @@ def main(argv=None) -> None:
                     help="import content-equivalent finished-ok nodes "
                          "instead of mapping them onto existing ones")
 
+    p_chaos = sub.add_parser(
+        "chaos", help="fault injection scenarios + invariant checking")
+    chaos_sub = p_chaos.add_subparsers(dest="sub", required=True)
+    cr = chaos_sub.add_parser(
+        "run", help="run one scenario against a throwaway daemon")
+    cr.add_argument("--scenario", required=True)
+    cr.add_argument("--seed", type=int, default=1)
+    cr.add_argument("--workdir", default=None,
+                    help="daemon workdir (default: fresh temp dir)")
+    cr.add_argument("--json", action="store_true")
+    chaos_sub.add_parser("list", help="list scenarios")
+    chaos_sub.add_parser("points", help="list registered fault points")
+    cc = chaos_sub.add_parser(
+        "check", help="run the provenance invariant checker on the profile")
+    cc.add_argument("--pk", type=int, action="append", default=[],
+                    help="pk(s) that must exist (repeatable)")
+    cc.add_argument("--expect-terminal", action="store_true",
+                    help="also require --pk processes to be terminal")
+
     args = ap.parse_args(argv)
     store = ProvenanceStore(args.profile)
 
@@ -765,6 +844,14 @@ def main(argv=None) -> None:
         cmd_archive_inspect(store, args)
     elif args.cmd == "archive" and args.sub == "import":
         cmd_archive_import(store, args)
+    elif args.cmd == "chaos" and args.sub == "run":
+        cmd_chaos_run(store, args)
+    elif args.cmd == "chaos" and args.sub == "list":
+        cmd_chaos_list(store, args)
+    elif args.cmd == "chaos" and args.sub == "points":
+        cmd_chaos_points(store, args)
+    elif args.cmd == "chaos" and args.sub == "check":
+        cmd_chaos_check(store, args)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import time
 import traceback
 from typing import Any, Mapping
 
+from repro.chaos import faults as chaos
 from repro.core.datatypes import DataValue, to_data_value
 from repro.core.exit_code import ExitCode
 from repro.core.ports import PortNamespace
@@ -282,6 +283,11 @@ class Process(StateMachine):
         so durability is guaranteed before the process can lose the CPU."""
         if self._pending_update is None and not self._ckpt_dirty:
             return
+        # the engine-step-vs-store-flush seam: between here and the commit
+        # the step exists only in memory — a crash must roll the process
+        # back to its previous durable checkpoint, losing work but never
+        # correctness
+        chaos.fault_point("process.flush.pre", pk=self.pk)
         with trace.span("checkpoint.flush"), self.store.transaction():
             if self._pending_update is not None:
                 update, self._pending_update = self._pending_update, None
@@ -293,6 +299,9 @@ class Process(StateMachine):
                     self.runner.logger.exception(
                         "checkpoint failed for %d", self.pk)
         self._ckpt_dirty = False
+        # flush durable, process about to continue — the other edge of
+        # the seam (a crash here redelivers an up-to-date checkpoint)
+        chaos.fault_point("process.flush.post", pk=self.pk)
 
     def checkpoint_now(self) -> None:
         """Force a durable checkpoint immediately (stage boundaries in
@@ -650,6 +659,10 @@ class Process(StateMachine):
                 with trace.span("process.body"):
                     result = await self.run()
                 exit_code = _interpret_result(result)
+                # body done, terminal unit of work not started: a crash
+                # here reruns the process from its last checkpoint — the
+                # invariant checker proves outputs still land exactly once
+                chaos.fault_point("process.terminal.pre", pk=self.pk)
                 # the terminal step is one unit of work: output storing +
                 # links + final state + checkpoint removal + span
                 # timeline, one commit

@@ -4,13 +4,23 @@ Wraps any transport task in a coroutine that catches exceptions and
 reschedules the operation with doubling intervals. After ``max_attempts``
 the wrapper raises ``TransportTaskExhausted`` — the owning process then
 PAUSES (never excepts), leaving the user free to fix the environment and
-``play`` it (the paper's robustness contract)."""
+``play`` it (the paper's robustness contract).
+
+Retries use *full jitter*: each wait is drawn uniformly from
+``[0, interval]`` before the interval doubles. When hundreds of processes
+hit the same dead scheduler at once, deterministic doubling re-synchronises
+their retries into thundering herds — jitter decorrelates them. Pass
+``jitter=False`` (or a seeded ``rng``) where tests need exact timings.
+"""
 
 from __future__ import annotations
 
 import asyncio
 import logging
+import random
 from typing import Awaitable, Callable
+
+from repro.observability import metrics as _metrics
 
 logger = logging.getLogger("repro.engine.backoff")
 
@@ -31,11 +41,16 @@ async def exponential_backoff_retry(
         max_attempts: int = 5,
         name: str = "transport-task",
         non_retryable: tuple[type[BaseException], ...] = (),
-        sleeper: Callable[[float], Awaitable] | None = None):
-    """Run ``fn`` with exponential backoff: waits double per retry."""
+        sleeper: Callable[[float], Awaitable] | None = None,
+        jitter: bool = True,
+        rng: random.Random | None = None):
+    """Run ``fn`` with exponential backoff: the interval ceiling doubles
+    per retry; the actual wait is full-jittered within it."""
     sleep = sleeper or asyncio.sleep
+    rand = rng or random
     interval = initial_interval
     last: BaseException | None = None
+    registry = _metrics.get_registry()
     for attempt in range(1, max_attempts + 1):
         try:
             return await fn()
@@ -49,6 +64,8 @@ async def exponential_backoff_retry(
                            max_attempts, exc)
             if attempt == max_attempts:
                 break
-            await sleep(interval)
+            registry.counter("backoff.retries").inc()
+            await sleep(rand.uniform(0.0, interval) if jitter else interval)
             interval *= 2.0
+    registry.counter("backoff.exhausted").inc()
     raise TransportTaskExhausted(name, max_attempts, last)

@@ -48,6 +48,7 @@ import time
 import uuid
 from typing import Any, Awaitable, Callable, Iterator
 
+from repro.chaos import faults as chaos
 from repro.core.statemachine import TERMINAL_STATES
 from repro.observability import metrics as _metrics
 from repro.observability import trace
@@ -119,7 +120,11 @@ class BrokerServer:
         self.stats = {
             "messages_in": 0, "messages_out": 0, "tasks_enqueued": 0,
             "tasks_delivered": 0, "events_logged": 0, "events_compacted": 0,
-            "rpc_cancelled": 0, "heartbeats": 0,
+            "rpc_cancelled": 0, "heartbeats": 0, "clients_dropped": 0,
+            # chaos-injected frame mutations (duplicate delivery /
+            # dropped broadcasts) — the harness asserts these actually
+            # fired instead of trusting the scenario spec
+            "chaos_duplicated": 0, "chaos_dropped": 0,
         }
 
     # -- storage ------------------------------------------------------------
@@ -149,11 +154,13 @@ class BrokerServer:
         uncommitted state flip only causes a redelivery, never a loss."""
         self._dirty += n
         if self._dirty >= 200:
+            chaos.fault_point("broker.commit.pre")
             self.conn().commit()
             self._dirty = 0
 
     def _commit_now(self) -> None:
         if self._dirty or self._events_uncommitted:
+            chaos.fault_point("broker.commit.pre")
             self.conn().commit()
             self._dirty = 0
             self._events_uncommitted = 0
@@ -212,14 +219,25 @@ class BrokerServer:
             self._drop_client(cid)
 
     def _drop_client(self, cid: str) -> None:
-        self._clients.pop(cid, None)
-        self._last_beat.pop(cid, None)
+        """Full disconnect cleanup, run the moment a client's connection
+        dies (EOF/reset — a SIGKILLed worker's sockets close immediately)
+        or its heartbeats lapse. Auto-disowns every pk the client claimed
+        and fails every RPC routed to or awaited by it, so
+        ``rpc_lookup``/``rpc_send`` never route to a dead worker in the
+        window between its crash and the tasks' redelivery. Idempotent —
+        the reaper and the connection handler can both call it."""
+        had_conn = self._clients.pop(cid, None) is not None
+        had_beat = self._last_beat.pop(cid, None) is not None
+        if had_conn or had_beat:
+            self.stats["clients_dropped"] += 1
         self._subs.pop(cid, None)
         self._prefetch.pop(cid, None)
         for consumers in self._consumers.values():
             consumers.discard(cid)
         for ident in [k for k, v in self._rpc.items() if v == cid]:
             del self._rpc[ident]
+        # auto-disown: a dead worker's pks leave the directory at once,
+        # so `process.<pk>` stops resolving until a new worker owns it
         for pk in [p for p, v in self._owners.items() if v == cid]:
             del self._owners[pk]
         # fail RPCs whose target just died — callers must not hang forever
@@ -231,6 +249,14 @@ class BrokerServer:
                 timer.cancel()
             self._send(origin, {"kind": "rpc_reply", "rid": rid,
                                 "error": "rpc target disconnected"})
+        # ...and discard replies queued FOR the dead client: nobody is
+        # listening, and a lingering timer would fire into the void
+        for rid in [r for r, (origin, _) in self._pending_rpc.items()
+                    if origin == cid]:
+            self._pending_rpc.pop(rid)
+            timer = self._rpc_timers.pop(rid, None)
+            if timer is not None:
+                timer.cancel()
         # requeue this consumer's inflight tasks immediately...
         self.conn().execute(
             "UPDATE tasks SET state='ready', consumer=NULL WHERE "
@@ -456,6 +482,12 @@ class BrokerServer:
                               for p in patterns)]
             if not matched:
                 continue
+            # chaos: a partition between broker and this client — the
+            # frames vanish, the durable event log keeps them for replay,
+            # and waiters must fall back to their liveness re-check
+            if chaos.fault_point("broker.broadcast.pre") == "drop":
+                self.stats["chaos_dropped"] += len(matched)
+                continue
             if len(matched) == 1:
                 self._send(cid, {"kind": "broadcast", **matched[0]})
             else:
@@ -616,9 +648,15 @@ class BrokerServer:
             conn.execute(
                 "UPDATE tasks SET state='inflight', consumer=?, delivered_at=?"
                 " WHERE id=?", (target, now, row["id"]))
-            self._send(target, {"kind": "task", "queue": queue,
-                                "task_id": row["id"],
-                                "payload": json.loads(row["payload"])})
+            frame = {"kind": "task", "queue": queue, "task_id": row["id"],
+                     "payload": json.loads(row["payload"])}
+            self._send(target, frame)
+            # chaos: an at-least-once transport may hand the same frame
+            # over twice — consumers must dedup on task_id
+            if chaos.fault_point("broker.deliver.pre",
+                                 queue=queue) == "duplicate":
+                self._send(target, frame)
+                self.stats["chaos_duplicated"] += 1
             delivered += 1
         self.stats["tasks_delivered"] += delivered
         self._maybe_commit(delivered)
@@ -674,6 +712,7 @@ class BrokerClient:
         self._flush_scheduled = False
         self._pending_own: set[int] = set()
         self._pending_disown: set[int] = set()
+        self._active_tasks: set[int] = set()
         self._tasks: list[asyncio.Task] = []
         self.heartbeat = 1.0
 
@@ -836,17 +875,31 @@ class BrokerClient:
 
     async def _run_task(self, msg: dict) -> None:
         handler = self._task_handlers.get(msg["queue"])
+        task_id = msg["task_id"]
         if handler is None:
-            self._send({"kind": "nack", "task_id": msg["task_id"],
+            self._send({"kind": "nack", "task_id": task_id,
                         "queue": msg["queue"]})
             return
+        if task_id in self._active_tasks:
+            # duplicated frame of a task we are already running (an
+            # at-least-once transport is allowed to do this): drop it —
+            # the original execution's eventual ack/nack settles the row
+            _metrics.get_registry().counter("broker.duplicate_frames").inc()
+            return
+        self._active_tasks.add(task_id)
         try:
             await handler(msg["payload"])
-            self._send({"kind": "ack", "task_id": msg["task_id"]})
+            # crash seam: the work is done (and durable) but the broker
+            # does not know — dying here forces a redelivery that the
+            # task handler must recognise as already-finished
+            chaos.fault_point("broker.ack.pre", task_id=task_id)
+            self._send({"kind": "ack", "task_id": task_id})
         except Exception:  # noqa: BLE001
             logger.exception("task failed; nacking for requeue")
-            self._send({"kind": "nack", "task_id": msg["task_id"],
+            self._send({"kind": "nack", "task_id": task_id,
                         "queue": msg["queue"]})
+        finally:
+            self._active_tasks.discard(task_id)
 
     async def _run_rpc(self, msg: dict) -> None:
         handler = self._rpc_handlers.get(msg["identifier"])

@@ -19,6 +19,7 @@ import os
 import time
 from typing import Any
 
+from repro.chaos import faults as chaos
 from repro.engine.runner import TERMINAL
 from repro.observability import logs as obs_logs
 from repro.observability import metrics as _metrics
@@ -47,6 +48,13 @@ def make_process_task_handler(runner, store, owned: set | None = None):
     resume/kill-durability path without spawning OS processes."""
     from repro.core.process import Process
 
+    #: pks this handler is currently driving — a second delivery of the
+    #: same pk (duplicate task row after a partition/requeue race) must
+    #: not run the process twice concurrently. Returning early is safe:
+    #: the duplicate's own task row gets acked while the original row
+    #: stays inflight until the real execution settles.
+    running: set[int] = set()
+
     async def handle(payload: dict) -> None:
         pk = payload["pk"]
         registry = _metrics.get_registry()
@@ -57,11 +65,18 @@ def make_process_task_handler(runner, store, owned: set | None = None):
             registry.histogram("daemon.pickup_seconds",
                                buckets=PICKUP_BUCKETS).observe(
                 max(0.0, time.time() - sent_ts))
+        if pk in running:
+            registry.counter("daemon.duplicate_tasks").inc()
+            return
         # slot-gate BEFORE materializing the Process: tasks delivered
         # beyond the slot count wait here as pk-only payloads, so resident
         # Process objects (checkpoint, inputs, namespaces) stay bounded by
         # the slot count — worker RSS does not grow with the backlog
         async with runner._sem():
+            if pk in running:
+                registry.counter("daemon.duplicate_tasks").inc()
+                return
+            chaos.fault_point("daemon.checkpoint.pre", pk=pk)
             checkpoint = store.load_checkpoint(pk)
             if checkpoint is None:
                 node = store.get_node(pk, columns=SUMMARY_COLUMNS)
@@ -71,6 +86,10 @@ def make_process_task_handler(runner, store, owned: set | None = None):
             with trace.span("daemon.resume", pk=pk):
                 process = Process.recreate_from_checkpoint(checkpoint,
                                                            runner=runner)
+            # rematerialized, first step not taken — the canonical
+            # kill-9-mid-step window the paper's robustness story covers
+            chaos.fault_point("daemon.checkpoint.post", pk=pk)
+            running.add(pk)
             if owned is not None:
                 owned.add(pk)
             registry.gauge("daemon.resident_processes").inc()
@@ -81,6 +100,7 @@ def make_process_task_handler(runner, store, owned: set | None = None):
                     await process.step_until_terminated()
             finally:
                 registry.gauge("daemon.resident_processes").dec()
+                running.discard(pk)
                 if owned is not None:
                     owned.discard(pk)
 
@@ -115,7 +135,11 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
     async def main() -> None:
         client = BrokerClient(broker_host, broker_port)
         await client.connect()
-        runner = Runner(store=store, communicator=client, slots=slots)
+        # REPRO_LIVENESS_INTERVAL shortens the store-recheck fallback that
+        # papers over lost terminal broadcasts (chaos partition scenarios)
+        liveness = float(os.environ.get("REPRO_LIVENESS_INTERVAL", "30"))
+        runner = Runner(store=store, communicator=client, slots=slots,
+                        liveness_interval=liveness)
         runner.distributed = True
         set_default_runner(runner)
 

@@ -49,6 +49,7 @@ import time
 import uuid as uuid_mod
 from typing import TYPE_CHECKING, Any, Iterable, Sequence
 
+from repro.chaos import faults as chaos
 from repro.observability import trace
 from repro.observability.metrics import StatsDict
 from repro.provenance.repository import BlobRepository
@@ -265,6 +266,14 @@ class ProvenanceStore:
             self._local.in_txn = True
             try:
                 yield
+                # crash seam: everything this unit of work wrote is still
+                # un-fsynced here — dying now must lose the whole step,
+                # never half of it. Inside the try so an injected *raise*
+                # takes the rollback path like any mid-transaction failure.
+                chaos.fault_point("store.commit.pre")
+                with trace.span("store.commit"):
+                    self._conn().commit()
+                self.stats["commits"] += 1
             except BaseException:
                 self._conn().rollback()
                 for fn in getattr(self._local, "rollback_cbs", []):
@@ -275,10 +284,6 @@ class ProvenanceStore:
                 self._local.post_commit = []
                 self._local.rollback_cbs = []
                 raise
-            else:
-                with trace.span("store.commit"):
-                    self._conn().commit()
-                self.stats["commits"] += 1
             finally:
                 self._local.in_txn = False
         # outside the lock: observers woken by these callbacks may read
@@ -288,6 +293,8 @@ class ProvenanceStore:
         self._local.rollback_cbs = []
         for fn in callbacks:
             fn()
+        # durable, observers notified — but the caller has not continued
+        chaos.fault_point("store.commit.post")
 
     def after_commit(self, fn) -> None:
         """Run ``fn`` after the enclosing transaction commits; immediately
@@ -309,9 +316,17 @@ class ProvenanceStore:
 
     def _commit(self) -> None:
         if not getattr(self._local, "in_txn", False):
-            with trace.span("store.commit"):
-                self._conn().commit()
-            self.stats["commits"] += 1
+            try:
+                chaos.fault_point("store.commit.pre")
+                with trace.span("store.commit"):
+                    self._conn().commit()
+                self.stats["commits"] += 1
+            except BaseException:
+                # an injected (or real) failure must not leave the write
+                # pending on the connection — the unit of work dies whole
+                self._conn().rollback()
+                raise
+            chaos.fault_point("store.commit.post")
 
     # -- payload routing (blob repository) --------------------------------------
     def _externalize_payload(self, doc: Any) -> Any:

@@ -41,11 +41,39 @@ def test_backoff_retries_until_success():
         sleeps.append(dt)
 
     result = run(exponential_backoff_retry(
-        flaky, initial_interval=0.1, max_attempts=5, sleeper=fake_sleep))
+        flaky, initial_interval=0.1, max_attempts=5, sleeper=fake_sleep,
+        jitter=False))
     assert result == "ok"
     assert len(attempts) == 4
     # intervals double: 0.1, 0.2, 0.4
     assert sleeps == [0.1, 0.2, pytest.approx(0.4)]
+
+
+def test_backoff_full_jitter_bounded_and_counted():
+    import random
+
+    from repro.observability import metrics as _metrics
+
+    registry = _metrics.reset_registry()
+    sleeps = []
+
+    async def always_fails():
+        raise ConnectionError("nope")
+
+    async def fake_sleep(dt):
+        sleeps.append(dt)
+
+    with pytest.raises(TransportTaskExhausted):
+        run(exponential_backoff_retry(
+            always_fails, initial_interval=0.1, max_attempts=4,
+            sleeper=fake_sleep, rng=random.Random(7)))
+    # full jitter: each wait is uniform in [0, ceiling] with the ceiling
+    # doubling per retry — never above it, and (seeded) not exactly at it
+    assert len(sleeps) == 3
+    for dt, ceiling in zip(sleeps, [0.1, 0.2, 0.4]):
+        assert 0.0 <= dt <= ceiling
+    assert registry.counter("backoff.retries").value == 3
+    assert registry.counter("backoff.exhausted").value == 1
 
 
 def test_backoff_exhaustion_raises():

@@ -1,0 +1,171 @@
+"""BaseRestartWorkChain driven through injected exit codes and chaos
+faults: handlers fire, inputs change on retry, iteration budgets exhaust,
+and killed/excepted children are retried instead of read as success."""
+
+import pytest
+
+from repro.calcjobs.restart import (
+    BaseRestartWorkChain, HandlerReport, process_handler,
+)
+from repro.chaos import faults
+from repro.chaos.faults import ChaosPlan
+from repro.core import Int, Process
+from repro.core.process import ProcessKilled
+from repro.provenance.store import NodeType
+
+
+@pytest.fixture(autouse=True)
+def _disarm_chaos():
+    faults.deactivate()
+    yield
+    faults.deactivate()
+
+
+class BrittleCalc(Process):
+    """Fails with exit 310 until its ``good`` input flips to 1 — the
+    knob a process handler turns on retry."""
+
+    NODE_TYPE = NodeType.CALC_FUNCTION
+    CACHEABLE = False
+
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("good", valid_type=Int, default=Int(0))
+        spec.output("value", valid_type=Int)
+        spec.exit_code(310, "ERROR_BAD_INPUT", "the input was bad")
+
+    async def run(self):
+        if not self.inputs["good"].value:
+            return self.exit_codes.ERROR_BAD_INPUT
+        self.out("value", Int(42))
+
+
+class SuicidalCalc(Process):
+    """Dies by kill (no exit code recorded) while ``armed``."""
+
+    NODE_TYPE = NodeType.CALC_FUNCTION
+    CACHEABLE = False
+
+    @classmethod
+    def define(cls, spec):
+        super().define(spec)
+        spec.input("armed", valid_type=Int, default=Int(1))
+        spec.output("value", valid_type=Int)
+
+    async def run(self):
+        if self.inputs["armed"].value:
+            raise ProcessKilled("chaos kill")
+        self.out("value", Int(7))
+
+
+class BrittleRestart(BaseRestartWorkChain):
+    _process_class = BrittleCalc
+
+    @process_handler(310)
+    def handle_bad_input(self, child):
+        # modify the retry's inputs — the canonical handler move
+        self.ctx.process_inputs["good"] = Int(1)
+        self.report("bad input handled: flipping 'good' for the retry")
+        return None
+
+
+def test_handler_fires_and_modifies_inputs(store, runner):
+    outputs, proc = runner.run(BrittleRestart, {"good": Int(0)})
+    assert proc.is_finished_ok
+    assert proc.ctx.iteration == 2
+    assert outputs["value"].value == 42
+    # first child failed with the injected status, second succeeded
+    first, second = proc.ctx.children
+    assert first.exit_status == 310
+    assert second.is_finished_ok
+
+
+class NeverHealsRestart(BaseRestartWorkChain):
+    _process_class = BrittleCalc
+
+    @process_handler(310)
+    def handle_plain_retry(self, child):
+        return None  # retry without changing anything — stays broken
+
+
+def test_max_iterations_exhausted(store, runner):
+    outputs, proc = runner.run(NeverHealsRestart, {
+        "good": Int(0), "max_iterations": Int(2)})
+    assert not proc.is_finished_ok
+    assert proc.exit_code.status == 401
+    assert proc.ctx.iteration == 2
+
+
+def test_unhandled_exit_code_is_unrecoverable(store, runner):
+    class NoHandlers(BaseRestartWorkChain):
+        _process_class = BrittleCalc
+
+    outputs, proc = runner.run(NoHandlers, {"good": Int(0)})
+    assert not proc.is_finished_ok
+    assert proc.exit_code.status == 402
+
+
+class SuicideRestart(BaseRestartWorkChain):
+    _process_class = SuicidalCalc
+
+    # killed children record exit status 998; excepted ones record nothing
+    # and surface as the synthetic EXIT_STATUS_DIED
+    @process_handler(998, BaseRestartWorkChain.EXIT_STATUS_DIED)
+    def handle_dead_child(self, child):
+        assert child.process_state in ("killed", "excepted")
+        self.ctx.process_inputs["armed"] = Int(0)
+        self.report("dead child handled: disarming the retry")
+        return None
+
+
+def test_killed_child_restarted_cleanly(store, runner):
+    """A child that dies without an exit code (killed) must not read as
+    success — the handler disarms it and the retry completes."""
+    outputs, proc = runner.run(SuicideRestart, {"armed": Int(1)})
+    assert proc.is_finished_ok
+    assert proc.ctx.iteration == 2
+    assert outputs["value"].value == 7
+    assert proc.ctx.children[0].process_state == "killed"
+
+
+class ChaosChildRestart(BaseRestartWorkChain):
+    _process_class = BrittleCalc
+
+    @process_handler(BaseRestartWorkChain.EXIT_STATUS_DIED)
+    def handle_dead_child(self, child):
+        return None  # plain retry; the chaos rule only fires once
+
+    @process_handler(310)
+    def handle_bad_input(self, child):
+        self.ctx.process_inputs["good"] = Int(1)
+        return None
+
+
+def test_chaos_excepted_child_restarted_cleanly(store, runner):
+    """Inject a one-shot fault into the first child's terminal step via
+    the chaos registry; the child excepts, the handler retries it."""
+    faults.activate(ChaosPlan(seed=1).on("process.terminal.pre", "raise",
+                                         nth=1))
+    outputs, proc = runner.run(ChaosChildRestart, {"good": Int(1)})
+    faults.deactivate()
+    assert proc.is_finished_ok
+    assert outputs["value"].value == 42
+    assert proc.ctx.children[0].process_state == "excepted"
+    assert proc.ctx.iteration == 2
+
+
+def test_handler_report_exit_code_short_circuits(store, runner):
+    class GiveUpRestart(BaseRestartWorkChain):
+        _process_class = BrittleCalc
+
+        @process_handler(310)
+        def handle_fatal(self, child):
+            from repro.core import ExitCode
+            return HandlerReport(
+                do_break=True,
+                exit_code=ExitCode(402, "declared unrecoverable"))
+
+    outputs, proc = runner.run(GiveUpRestart, {"good": Int(0)})
+    assert proc.exit_code.status == 402
+    assert proc.ctx.iteration == 1
