@@ -1,10 +1,14 @@
-"""Batched serving: prefill + continuous greedy decode on a small LM.
+"""Continuous-batching LM serving on a small model.
 
-    PYTHONPATH=src python examples/serve_lm.py --batch 4 --new-tokens 24
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --requests 10
 
-Uses the same serve_step the decode_* dry-run cells lower for the 256-chip
-mesh — here on CPU with a reduced model, demonstrating the KV cache, the
-(optional) int8 cache quantisation, and tokens/s accounting.
+Front door is ``repro.configs.setup_devices`` (host-device forcing works
+on CPU-only machines), then a :class:`~repro.serving.serve.BatchScheduler`
+drives prefill + per-slot-position decode: requests of different prompt
+lengths and budgets are co-batched, evicted on completion, and replaced
+from the FIFO queue mid-flight. ``--decode-impl pallas`` routes the
+decode inner product through the flash-decode kernel (interpreted off
+TPU); ``--int8-kv`` quantises the KV cache.
 """
 
 import argparse
@@ -13,61 +17,66 @@ import time
 
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import get_config, setup_devices
 from repro.models.registry import build
-from repro.serving.serve import make_decode_step, make_prefill_step
+from repro.serving.serve import BatchScheduler, Request
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--platform", default="cpu")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (micro-batch size)")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--decode-impl", default="pallas",
+                    choices=["direct", "pallas"])
     ap.add_argument("--int8-kv", action="store_true")
     args = ap.parse_args()
 
+    devices = setup_devices(platform=args.platform, n_devices=args.devices)
+    print(f"devices: {len(devices)}x {devices[0].platform}")
+
+    import jax  # after setup_devices so the platform choice sticks
+
     cfg = get_config("aiida-demo-110m").replace(
         num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, d_ff=704,
-        vocab_size=8192,
+        vocab_size=8192, decode_impl=args.decode_impl,
         kv_cache_dtype="int8" if args.int8_kv else "bfloat16")
     bundle = build(cfg)
     params = bundle.init_params(jax.random.PRNGKey(0))
 
-    b, s = args.batch, args.prompt_len
-    max_len = s + args.new_tokens + 1
+    max_len = args.max_prompt_len + args.new_tokens + 1
+    sched = BatchScheduler(bundle, params, batch_size=args.batch,
+                           max_len=max_len)
+
+    # mixed-length prompts from a small length set (each distinct prompt
+    # length compiles its own prefill; decode is one shared program)
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, s)), jnp.int32)
-
-    prefill = jax.jit(make_prefill_step(bundle))
-    decode = jax.jit(make_decode_step(bundle), donate_argnums=(1,))
-
-    cache = bundle.init_cache(b, max_len)
+    lengths = [args.max_prompt_len, args.max_prompt_len // 2]
     t0 = time.time()
-    tok, cache = prefill(params, {"tokens": prompts}, cache)
-    tok.block_until_ready()
-    t_prefill = time.time() - t0
-    print(f"prefill: {b}x{s} tokens in {t_prefill*1e3:.0f}ms "
-          f"({b*s/t_prefill:.0f} tok/s)")
+    for rid in range(args.requests):
+        n = lengths[rid % len(lengths)]
+        sched.submit(Request(
+            rid=rid,
+            prompt=rng.integers(1, cfg.vocab_size, n).tolist(),
+            max_new_tokens=args.new_tokens - (rid % 3) * 4))
+    finished = sched.run()
+    dt = time.time() - t0
 
-    generated = [tok]
-    t0 = time.time()
-    for i in range(args.new_tokens - 1):
-        tok, cache = decode(params, cache, tok, jnp.asarray(s + i))
-        generated.append(tok)
-    tok.block_until_ready()
-    t_decode = time.time() - t0
-    out = jnp.concatenate(generated, axis=1)
-    print(f"decode: {args.new_tokens - 1} steps x batch {b} in "
-          f"{t_decode*1e3:.0f}ms "
-          f"({b*(args.new_tokens-1)/t_decode:.0f} tok/s)")
-    kv = "int8" if args.int8_kv else "bf16"
-    print(f"kv cache dtype: {kv}")
-    for row in range(min(b, 2)):
-        print(f"  sample {row}: {np.asarray(out[row])[:12].tolist()} ...")
+    toks = sum(len(r.generated) for r in finished)
+    print(f"served {len(finished)} requests through {args.batch} slots in "
+          f"{dt:.2f}s ({toks} tokens, {toks/dt:.0f} tok/s, "
+          f"decode_impl={args.decode_impl}, "
+          f"kv={'int8' if args.int8_kv else 'bf16'})")
+    for r in finished[:4]:
+        print(f"  req {r.rid}: prompt {len(r.prompt):3d} tok -> "
+              f"{len(r.generated):2d} new [{r.finish_reason}] "
+              f"{r.generated[:8]} ...")
 
 
 if __name__ == "__main__":

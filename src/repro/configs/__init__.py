@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import importlib
 
+from repro.configs.devices import make_serving_mesh, setup_devices  # noqa: F401
 from repro.models.common import ModelConfig
 
 ARCH_IDS = [

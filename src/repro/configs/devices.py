@@ -1,0 +1,72 @@
+"""Reproducible computation-environment setup (the serving front door).
+
+Tests, benches and examples that need a *multi-device* mesh on a CPU-only
+host call :func:`setup_devices` before anything touches the jax backend:
+
+    from repro.configs import setup_devices
+    setup_devices(platform="cpu", n_devices=8)
+
+which forces XLA to expose ``n_devices`` host devices (the
+``--xla_force_host_platform_device_count`` idiom), pins the platform and
+optionally flips fp64 on — so a laptop and CI lower the exact same
+sharded decode program as an 8-chip slice. The call is idempotent for
+the same arguments and fails loudly when the backend was already
+initialised with a different device count (jax reads these knobs once).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _backend_initialized() -> bool:
+    import jax
+
+    # jax caches backends on first use; util.clear_backends is best-effort
+    # and version-dependent, so we only *detect* initialisation here.
+    try:
+        return jax._src.xla_bridge._backends != {}  # noqa: SLF001
+    except Exception:
+        return False
+
+
+def setup_devices(platform: str = "cpu", n_devices: int | None = None,
+                  use_x64: bool = False) -> list:
+    """Configure platform / device count / precision, returning the devices.
+
+    Must run before the first jax computation. ``n_devices`` only has an
+    effect on the host (CPU) platform, where XLA is told to expose that
+    many independent devices — the standard recipe for exercising real
+    GSPMD partitioning in unit tests.
+    """
+    if platform == "cpu" and n_devices is not None:
+        flags = os.environ.get("XLA_FLAGS", "")
+        parts = [p for p in flags.split() if not p.startswith(_FORCE_FLAG)]
+        parts.append(f"{_FORCE_FLAG}={int(n_devices)}")
+        os.environ["XLA_FLAGS"] = " ".join(parts)
+
+    import jax
+
+    jax.config.update("jax_platform_name", platform)
+    jax.config.update("jax_enable_x64", bool(use_x64) or
+                      bool(int(os.getenv("JAX_ENABLE_X64", "0") or 0)))
+
+    devices = jax.devices()
+    if n_devices is not None and len(devices) != int(n_devices):
+        raise RuntimeError(
+            f"requested {n_devices} {platform} devices but the backend "
+            f"exposes {len(devices)} — setup_devices() must be called "
+            f"before jax initialises (import repro.configs first, or set "
+            f"XLA_FLAGS={_FORCE_FLAG}={n_devices} in the environment)")
+    return devices
+
+
+def make_serving_mesh(data: int = 1, model: int = 1,
+                      axis_names: Sequence[str] = ("data", "model")):
+    """Mesh over the forced host devices for sharded serving tests."""
+    import jax
+
+    return jax.make_mesh((int(data), int(model)), tuple(axis_names))

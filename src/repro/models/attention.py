@@ -282,19 +282,33 @@ def kv_cache_axes(cfg: ModelConfig, *, layers: bool = True) -> dict[str, tuple]:
 
 def _cache_write(cache: dict[str, jax.Array], k: jax.Array, v: jax.Array,
                  pos: jax.Array, quantized: bool) -> dict[str, jax.Array]:
-    """Write one new (B, 1, Hkv, hd) k/v at index pos (ring handled upstream)."""
+    """Write one new (B, 1, Hkv, hd) k/v at index pos (ring handled upstream).
+
+    ``pos`` may be a scalar (all rows at the same depth) or a (B,) vector —
+    the continuous-batching case where every slot sits at its own position.
+    """
+    per_row = getattr(pos, "ndim", 0) == 1
+
+    def put(buf: jax.Array, upd: jax.Array) -> jax.Array:
+        if per_row:
+            return jax.vmap(
+                lambda c, u, p: lax.dynamic_update_slice_in_dim(c, u, p,
+                                                                axis=0)
+            )(buf, upd, pos)
+        return lax.dynamic_update_slice_in_dim(buf, upd, pos, axis=1)
+
     if quantized:
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
         return {
-            "k": lax.dynamic_update_slice_in_dim(cache["k"], kq, pos, axis=1),
-            "v": lax.dynamic_update_slice_in_dim(cache["v"], vq, pos, axis=1),
-            "k_scale": lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, pos, axis=1),
-            "v_scale": lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, pos, axis=1),
+            "k": put(cache["k"], kq),
+            "v": put(cache["v"], vq),
+            "k_scale": put(cache["k_scale"], ks),
+            "v_scale": put(cache["v_scale"], vs),
         }
     return {
-        "k": lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1),
-        "v": lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1),
+        "k": put(cache["k"], k),
+        "v": put(cache["v"], v),
     }
 
 
@@ -309,16 +323,26 @@ def _cache_read(cfg: ModelConfig, cache: dict[str, jax.Array]):
 def attn_decode(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
                 cache: dict[str, jax.Array], pos: jax.Array, *,
                 window: int = 0) -> tuple[jax.Array, dict[str, jax.Array]]:
-    """One-token decode. x: (B, 1, D); pos: scalar int32 current position.
+    """One-token decode. x: (B, 1, D); pos: scalar int32 current position,
+    or a (B,) int32 vector of *per-row* positions (continuous batching —
+    each slot writes its k/v at, and attends up to, its own depth).
 
     For ``window > 0`` the cache is a ring buffer of length ``window`` —
-    entries are written at ``pos % window`` and masked by recency.
+    entries are written at ``pos % window`` and masked by recency. Ring
+    buffers require a scalar ``pos`` (all rows advance in lockstep).
     """
     b = x.shape[0]
+    per_row = getattr(pos, "ndim", 0) == 1
+    if per_row and window > 0:
+        raise ValueError("per-row decode positions are incompatible with "
+                         "ring-buffer (windowed) KV caches")
     q, k, v = _project_qkv(cfg, p, x)
     if cfg.use_rope:
-        posv = jnp.full((1,), pos, jnp.int32)
-        q, k = rope(q, k, posv[None, :], cfg.rope_theta)
+        if per_row:
+            posv = pos.astype(jnp.int32)[:, None]          # (B, 1)
+        else:
+            posv = jnp.full((1,), pos, jnp.int32)[None, :]  # (1, 1)
+        q, k = rope(q, k, posv, cfg.rope_theta)
 
     max_len = cache["k"].shape[1]
     write_pos = (pos % window) if window > 0 else pos
@@ -337,6 +361,28 @@ def attn_decode(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
         cv = shard(cv, "kv_batch", "kv_seq_sharded", None, None)
         q = shard(q, "kv_batch", None, None, None)
 
+    hkv = ck.shape[2]
+    h = q.shape[2]
+    g = h // hkv
+    hd = q.shape[-1]
+    scale = cfg.attention_multiplier or (1.0 / float(hd) ** 0.5)
+
+    # Flash-decode Pallas kernel path: ragged per-row lengths land directly
+    # on the kernel's scalar-prefetch lens argument. Ring buffers and
+    # soft-capping stay on the masked-einsum path below.
+    if cfg.decode_impl == "pallas" and window == 0 and not cfg.attn_softcap:
+        from repro.kernels.decode_attention import ops as da_ops
+
+        kv_len = (pos if per_row else jnp.broadcast_to(pos, (b,))) + 1
+        out = da_ops.decode_attention(q[:, 0], ck, cv,
+                                      kv_len.astype(jnp.int32),
+                                      scale=float(scale),
+                                      block_kv=cfg.attn_kv_block)
+        out = out[:, None]                                  # (B, 1, H, hd)
+        out = shard(out, "kv_batch", None, "heads_sharded", None)
+        dt = x.dtype
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), cache
+
     # slot -> absolute position (ring buffers wrap)
     slots = jnp.arange(max_len, dtype=jnp.int32)
     if window > 0:
@@ -345,20 +391,19 @@ def attn_decode(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
                           cycle - window + slots)
         kv_len = None
         valid = (k_pos >= 0) & (k_pos > pos - window) & (k_pos <= pos)
+    elif per_row:
+        valid = slots[None, :] <= pos[:, None]              # (B, Smax)
     else:
-        k_pos = slots
         valid = slots <= pos
 
-    hkv = ck.shape[2]
-    h = q.shape[2]
-    g = h // hkv
-    hd = q.shape[-1]
-    scale = cfg.attention_multiplier or (1.0 / float(hd) ** 0.5)
     qg = q.reshape(b, 1, hkv, g, hd)
     logits = jnp.einsum("bskgh,btkh->bkgst", qg, ck).astype(jnp.float32) * scale
     logits = _softcap(logits, cfg.attn_softcap)
     bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
-    logits = logits + bias[None, None, None, None, :]
+    if per_row:
+        logits = logits + bias[:, None, None, None, :]
+    else:
+        logits = logits + bias[None, None, None, None, :]
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgst,btkh->bskgh", probs, cv).reshape(b, 1, h, hd)
     out = shard(out, "kv_batch", None, "heads_sharded", None)

@@ -115,6 +115,9 @@ class ModelConfig:
     # materialized. 0 = off.
     ce_chunk: int = 0
     use_pallas: bool = False
+    # decode-attention inner product: 'direct' (einsum over the full cache)
+    # or 'pallas' (the flash-decode kernel, ragged per-row kv lengths).
+    decode_impl: str = "direct"
     kv_cache_dtype: str = "bfloat16"   # 'int8' enables quantised KV cache
     # Number of physical replications of KV heads so the KV-head dim divides
     # the model axis. 1 means no repetition. Set by the sharding resolver.

@@ -1,19 +1,42 @@
-"""Serving steps: prefill and single-token decode (greedy), plus a simple
-continuous-batching request scheduler used by examples/serve_lm.py.
+"""Serving steps and the continuous-batching request scheduler.
 
-``make_decode_step`` is what the dry-run lowers for ``decode_*`` and
-``long_*`` cells (one new token against a seq_len-deep KV cache)."""
+``make_prefill_step`` / ``make_decode_step`` are the single-program
+building blocks (also lowered by the dry-run for ``decode_*`` cells).
+:class:`BatchScheduler` composes them into request-level micro-batching:
+
+* **admission** — FIFO queue; a free slot triggers a one-row prefill of
+  the request's exact prompt (no padding, so the first sampled token is
+  taken at the true last prompt position) whose KV rows are spliced into
+  the slot's row of the shared batch cache;
+* **per-slot positions** — every decode step runs ONE program over the
+  whole batch with a ``(B,)`` position vector (``attn_decode``'s per-row
+  path), so co-batched requests at different depths neither pad nor
+  re-compile; with ``decode_impl='pallas'`` the ragged depths feed the
+  flash-decode kernel's scalar-prefetch lengths directly;
+* **eviction** — EOS, ``max_new_tokens`` or cache exhaustion frees the
+  slot for the next queued request mid-flight;
+* **metrics** — per-request latency and token counts land in the
+  process-wide observability registry (``serving.*``).
+
+Greedy decoding throughout: a given (model, prompt) pair always yields
+the same continuation, which is what lets generations participate in the
+content-addressed cache (see ``serving/inference.py``).
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
-from repro.models.registry import ModelBundle
+from repro.models.registry import LM_FAMILIES, ModelBundle
+from repro.observability.metrics import get_registry
 
 
 def make_prefill_step(bundle: ModelBundle) -> Callable:
@@ -35,7 +58,7 @@ def make_decode_step(bundle: ModelBundle) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# Minimal continuous-batching scheduler (host-side)
+# Continuous-batching scheduler (host-side control, one jitted decode step)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -45,13 +68,28 @@ class Request:
     max_new_tokens: int
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: str = ""           # 'eos' | 'length' | 'cache_full'
+    submitted_at: float = 0.0
+    started_at: float = 0.0
+    finished_at: float = 0.0
 
 
 class BatchScheduler:
-    """Greedy slot-based continuous batching over a fixed decode batch."""
+    """Slot-based continuous batching with per-slot decode positions.
+
+    ``batch_size`` fixes the decode micro-batch (the compiled program's
+    batch dim); requests beyond that wait in the FIFO queue and are
+    admitted the moment a slot is evicted. ``max_len`` bounds prompt +
+    generation per slot.
+    """
 
     def __init__(self, bundle: ModelBundle, params: Any, batch_size: int,
                  max_len: int, eos_id: int = -1):
+        if bundle.cfg.family not in LM_FAMILIES:
+            raise ValueError(
+                f"BatchScheduler drives KV-cache LM families {LM_FAMILIES}, "
+                f"not {bundle.cfg.family!r} (recurrent families have no "
+                f"per-slot cache rows to splice)")
         self.bundle = bundle
         self.params = params
         self.batch_size = batch_size
@@ -59,48 +97,124 @@ class BatchScheduler:
         self.eos_id = eos_id
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * batch_size
-        self.decode_step = jax.jit(make_decode_step(bundle), donate_argnums=(1,))
+        self.decode_step = jax.jit(make_decode_step(bundle),
+                                   donate_argnums=(1,))
+        # one-row prefill; retraces per distinct prompt length (serving
+        # workloads draw from a small set of lengths — see docs/serving.md)
+        self.prefill_step = jax.jit(make_prefill_step(bundle))
+        self._insert_row = jax.jit(self._insert_row_impl, donate_argnums=(0,))
         self.cache = bundle.init_cache(batch_size, max_len)
-        self.tokens = jnp.zeros((batch_size, 1), jnp.int32)
-        self.pos = 0
+        # host-side control state: last token + cache depth per slot. Empty
+        # slots keep a frozen pos — their rows are never read, and admission
+        # overwrites the whole row before re-activating one.
+        self.tokens = np.zeros((batch_size, 1), np.int32)
+        self.pos = np.zeros(batch_size, np.int32)
+        reg = get_registry()
+        self._m_submitted = reg.counter("serving.requests_submitted")
+        self._m_completed = reg.counter("serving.requests_completed")
+        self._m_evicted = reg.counter("serving.slot_evictions")
+        self._m_decode_steps = reg.counter("serving.decode_steps")
+        self._m_prefill_tokens = reg.counter("serving.prefill_tokens")
+        self._m_tokens = reg.counter("serving.tokens_generated")
+        self._g_active = reg.gauge("serving.slots_active")
+        self._g_queue = reg.gauge("serving.queue_depth")
+        self._h_latency = reg.histogram("serving.request_seconds")
 
+    # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(f"prompt of {len(req.prompt)} tokens cannot fit "
+                             f"a max_len={self.max_len} cache")
+        req.submitted_at = time.monotonic()
         self.queue.append(req)
+        self._m_submitted.inc()
+        self._g_queue.set(len(self.queue))
 
-    def _fill_slots(self) -> None:
-        for i, slot in enumerate(self.slots):
-            if (slot is None or slot.done) and self.queue:
-                req = self.queue.popleft()
-                self.slots[i] = req
-                # naive: feed prompt tokens one at a time via decode steps
-                toks = self.tokens.at[i, 0].set(req.prompt[0])
-                self.tokens = toks
-                req.generated = []
+    @staticmethod
+    def _insert_row_impl(full_cache, row_cache, slot):
+        return jax.tree.map(
+            lambda f, r: lax.dynamic_update_slice_in_dim(
+                f, r.astype(f.dtype), slot, axis=1),
+            full_cache, row_cache)
 
-    def step(self) -> list[Request]:
-        """One decode step across all active slots; returns finished reqs."""
-        self._fill_slots()
-        if all(s is None for s in self.slots):
-            return []
-        next_tok, self.cache = self.decode_step(
-            self.params, self.cache, self.tokens, jnp.asarray(self.pos))
-        self.pos += 1
-        next_host = jax.device_get(next_tok)[:, 0].tolist()
+    def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        req.started_at = time.monotonic()
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        row_cache = self.bundle.init_cache(1, self.max_len)
+        first_tok, row_cache = self.prefill_step(
+            self.params, {"tokens": prompt}, row_cache)
+        self.cache = self._insert_row(self.cache, row_cache,
+                                      jnp.asarray(slot, jnp.int32))
+        self.slots[slot] = req
+        self.pos[slot] = len(req.prompt)
+        tok = int(jax.device_get(first_tok)[0, 0])
+        self.tokens[slot, 0] = tok
+        req.generated = [tok]
+        self._m_prefill_tokens.inc(len(req.prompt))
+        self._m_tokens.inc()
+
+    def _admit(self) -> list[Request]:
+        """Fill free slots from the queue; returns requests that finished
+        at admission (single-token generations)."""
         finished = []
-        for i, req in enumerate(self.slots):
-            if req is None or req.done:
+        for i in range(self.batch_size):
+            if self.slots[i] is not None or not self.queue:
                 continue
-            consumed = 1 + self.pos  # prompt feeding progress (approximate)
-            if len(req.generated) < len(req.prompt) - 1:
-                # still feeding the prompt teacher-forced
-                req.generated.append(req.prompt[min(len(req.generated) + 1,
-                                                    len(req.prompt) - 1)])
-            else:
-                req.generated.append(int(next_host[i]))
-            del consumed
-            self.tokens = self.tokens.at[i, 0].set(req.generated[-1])
-            if (len(req.generated) >= len(req.prompt) - 1 + req.max_new_tokens
-                    or req.generated[-1] == self.eos_id):
-                req.done = True
+            req = self.queue.popleft()
+            self._prefill_into_slot(req, i)
+            if self._maybe_finish(i):
                 finished.append(req)
+        self._g_queue.set(len(self.queue))
+        self._g_active.set(sum(s is not None for s in self.slots))
+        return finished
+
+    # -- eviction ------------------------------------------------------------
+    def _maybe_finish(self, slot: int) -> bool:
+        req = self.slots[slot]
+        if req.generated and req.generated[-1] == self.eos_id:
+            req.finish_reason = "eos"
+        elif len(req.generated) >= req.max_new_tokens:
+            req.finish_reason = "length"
+        elif int(self.pos[slot]) >= self.max_len - 1:
+            req.finish_reason = "cache_full"
+        else:
+            return False
+        req.done = True
+        req.finished_at = time.monotonic()
+        self.slots[slot] = None
+        self._m_completed.inc()
+        self._m_evicted.inc()
+        self._h_latency.observe(req.finished_at - req.submitted_at)
+        return True
+
+    # -- the decode loop -----------------------------------------------------
+    def step(self) -> list[Request]:
+        """Admit waiting requests, then run ONE decode step across all
+        active slots; returns the requests that finished this step."""
+        finished = self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            self._g_active.set(0)
+            return finished
+        next_tok, self.cache = self.decode_step(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.pos, jnp.int32))
+        self._m_decode_steps.inc()
+        next_host = jax.device_get(next_tok)[:, 0]
+        for i in active:
+            req = self.slots[i]
+            req.generated.append(int(next_host[i]))
+            self.pos[i] += 1
+            self.tokens[i, 0] = int(next_host[i])
+            self._m_tokens.inc()
+            if self._maybe_finish(i):
+                finished.append(req)
+        self._g_active.set(sum(s is not None for s in self.slots))
+        return finished
+
+    def run(self) -> list[Request]:
+        """Drain queue + slots to completion; finished in completion order."""
+        finished: list[Request] = []
+        while self.queue or any(s is not None for s in self.slots):
+            finished.extend(self.step())
         return finished

@@ -126,6 +126,70 @@ def test_decode_attention_ragged_lengths_property(kv_len):
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
 
 
+@pytest.mark.parametrize("h,hkv", [(8, 4), (8, 1), (4, 2), (6, 3)])
+@pytest.mark.parametrize("hd", [32, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_gqa_headdim_sweep(h, hkv, hd, dtype):
+    """GQA group ratios (h != hkv, incl. MQA and non-pow2 heads) across
+    head dims and dtypes, with ragged per-row lengths."""
+    b, smax = 2, 128
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, hd)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (b, smax, hkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (b, smax, hkv, hd)), dtype)
+    lens = jnp.asarray([31, smax], jnp.int32)
+    out = decode_attention(q, k, v, lens, block_kv=64)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_decode_attention_kvlen_edge_cases():
+    """One batch mixing the ragged-length edges: a single live entry, a
+    length that is no multiple of block_kv, Smax-1 and exactly Smax."""
+    b, h, hd, smax = 4, 4, 32, 256
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, smax, h, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, smax, h, hd)), jnp.float32)
+    lens = jnp.asarray([1, 130, smax - 1, smax], jnp.int32)
+    out = decode_attention(q, k, v, lens, block_kv=128)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+    # kv_len=1 must reproduce v[:, 0] exactly (softmax over one entry)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(v[0, 0]),
+                               atol=5e-5)
+
+
+def test_decode_attention_kvlen_zero_is_zero_output():
+    """kv_len=0 (a slot with an empty cache) must yield a finite all-zero
+    row, not NaNs. Kernel-only: the jnp oracle softmaxes over an all-masked
+    row and returns garbage for length 0, so there is nothing to diff."""
+    b, h, hd, smax = 2, 4, 32, 128
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, smax, h, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, smax, h, hd)), jnp.float32)
+    lens = jnp.asarray([0, 64], jnp.int32)
+    out = np.asarray(decode_attention(q, k, v, lens, block_kv=64))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out[0], np.zeros((h, hd)), atol=0)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out[1], np.asarray(ref[1]), atol=5e-5)
+
+
+@pytest.mark.parametrize("block_kv", [128, 256, 512])
+def test_decode_attention_block_kv_invariance(block_kv):
+    """The KV tile size is a pure scheduling knob: results must match the
+    oracle bit-for-tolerance at every block_kv."""
+    b, h, hkv, hd, smax = 2, 4, 2, 64, 512
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, smax, hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, smax, hkv, hd)), jnp.float32)
+    lens = jnp.asarray([200, 511], jnp.int32)
+    out = decode_attention(q, k, v, lens, block_kv=block_kv)
+    ref = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
 # ---------------------------------------------------------------------------
 # rglru scan sweeps
 # ---------------------------------------------------------------------------
