@@ -542,7 +542,12 @@ def bench_saturation(n_total=100_000, n_live=10_000, workers=4,
                 "tasks_enqueued": bs.get("tasks_enqueued"),
                 "tasks_delivered": bs.get("tasks_delivered"),
                 "event_log_size": bs.get("event_log_size"),
-                "events_compacted": bs.get("events_compacted")},
+                "events_compacted": bs.get("events_compacted"),
+                # lease bookkeeping must stay off the hot path: grants ride
+                # the existing delivery write, zero expiries when healthy
+                "leases_granted": bs.get("leases_granted"),
+                "leases_expired": bs.get("leases_expired"),
+                "stale_claims": bs.get("stale_claims")},
             "rss_kb": {"at_live": rss_at_live, "peak": peak_rss,
                        "end": rss_end},
         }

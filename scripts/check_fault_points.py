@@ -6,7 +6,8 @@
    toward unregistered, untestable seams);
 3. every fault clause in the built-in scenarios parses and targets at
    least one registered point (``ChaosPlan.parse`` enforces this);
-4. every registered name is documented in docs/chaos.md.
+4. every registered name is documented in docs/chaos.md;
+5. every built-in scenario is documented in docs/chaos.md.
 
     python scripts/check_fault_points.py
 """
@@ -68,6 +69,11 @@ def main() -> int:
             if name not in text:
                 errors.append(f"catalog point {name!r} is not documented "
                               "in docs/chaos.md")
+        # 5: ... and every built-in scenario
+        for name in sorted(SCENARIOS):
+            if f"`{name}`" not in text:
+                errors.append(f"scenario {name!r} is not documented in "
+                              "docs/chaos.md")
 
     if errors:
         print(f"check_fault_points: {len(errors)} problem(s)")

@@ -86,6 +86,12 @@ CATALOG: dict[str, str] = {
     "broker.broadcast.pre": (
         "broker server fanning one broadcast batch to one client; "
         "supports the 'drop' directive (a partition)"),
+    "lease.expire": (
+        "broker reaper (or client drop) expiring a lapsed process lease — "
+        "the pk is about to be requeued and its next grant epoch-bumped"),
+    "broker.restart": (
+        "daemon supervisor about to respawn a dead broker process on its "
+        "old port; the replacement rebuilds state from the broker sqlite"),
 }
 
 _ACTIONS = ("crash", "raise", "delay", "duplicate", "drop")

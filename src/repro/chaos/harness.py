@@ -22,7 +22,9 @@ judges the store.
 from __future__ import annotations
 
 import os
+import re
 import signal
+import sqlite3
 import random
 import tempfile
 import time
@@ -52,6 +54,15 @@ class Scenario:
     #: SIGKILL schedule: ``sigkills`` kills at seeded times in the window
     sigkills: int = 0
     sigkill_window: tuple[float, float] = (0.4, 2.5)
+    #: zombie schedule: SIGSTOP one live worker at ``sigstop_at`` (it
+    #: keeps its OS pid — the supervisor does NOT restart it), then
+    #: SIGCONT it at ``sigcont_at``, after its leases lapsed and its pks
+    #: were requeued — the woken zombie must fence itself on the store
+    sigstop_at: float | None = None
+    sigcont_at: float | None = None
+    #: SIGKILL the broker OS process at this offset; the daemon
+    #: supervisor must restart it on the same port
+    broker_kill_at: float | None = None
     #: durable kill_requested markers written against this many pks
     durable_kills: int = 0
     kill_at: float = 0.4
@@ -63,6 +74,10 @@ class Scenario:
     expect_restarts: bool = False
     expect_stats: dict = field(default_factory=dict)
     expect_killed: bool = False
+    expect_broker_restarts: bool = False
+    #: minimum values for durable store meta counters, e.g.
+    #: {"lease.fenced_writes": 1} — proof the fencing actually fired
+    expect_meta: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -76,6 +91,8 @@ class ScenarioResult:
     states: dict
     elapsed: float
     failures: list = field(default_factory=list)
+    broker_restarts: int = 0
+    meta: dict = field(default_factory=dict)
 
     @property
     def ok(self) -> bool:
@@ -85,11 +102,15 @@ class ScenarioResult:
         head = "PASS" if self.ok else "FAIL"
         lines = [
             f"scenario {self.name!r} seed={self.seed}: {head} "
-            f"({self.elapsed:.1f}s, {self.restarts} worker restarts)",
+            f"({self.elapsed:.1f}s, {self.restarts} restarts, "
+            f"{self.broker_restarts} broker restarts)",
             self.report.summary(),
         ]
+        for key, val in sorted(self.meta.items()):
+            lines.append(f"store meta {key:<18}: {val}")
         for key in ("chaos_duplicated", "chaos_dropped", "clients_dropped",
-                    "tasks_delivered"):
+                    "tasks_delivered", "leases_granted", "leases_expired",
+                    "stale_claims"):
             if key in self.broker_stats:
                 lines.append(f"broker {key:<17}: {self.broker_stats[key]}")
         for f in self.failures:
@@ -155,11 +176,64 @@ SCENARIOS: dict[str, Scenario] = {s.name: s for s in [
         chaos="store.commit.pre:delay:delay=0.03,p=0.5;"
               "broker.commit.pre:delay:delay=0.02,p=0.3",
         n=4, steps=3, pause=0.05),
+    Scenario(
+        name="zombie-worker",
+        description="SIGSTOP a live worker across lease expiry (a GC "
+                    "pause / partition stand-in); its pks are requeued at "
+                    "a bumped epoch, and when SIGCONT wakes the zombie "
+                    "its stale writes must be fenced by the store — "
+                    "outputs land exactly once, from the new holder.",
+        n=4, steps=6, pause=0.25, workers=2,
+        sigstop_at=0.8, sigcont_at=3.5,
+        expect_stats={"leases_expired": 1},
+        expect_meta={"lease.fenced_writes": 1}),
+    Scenario(
+        name="broker-kill9",
+        description="kill -9 the broker mid-delivery; the daemon "
+                    "supervisor restarts it on the same port, the "
+                    "replacement rebuilds leases/tasks from sqlite, "
+                    "workers reconnect and re-own — exactly-once holds.",
+        n=6, steps=5, pause=0.15, workers=2,
+        broker_kill_at=1.0,
+        expect_broker_restarts=True),
+    Scenario(
+        name="fleet-churn",
+        description="Rolling SIGKILLs across a 3-worker fleet under "
+                    "load; leases expire, epochs advance, replacements "
+                    "resume from checkpoints — no duplicated outputs.",
+        n=8, steps=5, pause=0.12, workers=3,
+        sigkills=5, sigkill_window=(0.5, 4.0),
+        expect_restarts=True),
 ]}
 
 
 def list_scenarios() -> list[Scenario]:
     return list(SCENARIOS.values())
+
+
+def _leased_worker_pids(broker_db: str) -> set[int]:
+    """OS pids of workers currently holding process leases, parsed from
+    the broker's durable lease table (worker names embed the pid). Used
+    to pick a SIGSTOP victim that actually owns in-flight work — a
+    zombie with nothing to write can never demonstrate fencing.
+    Best-effort: the broker batches commits, so this lags grants by up
+    to one reaper tick."""
+    try:
+        conn = sqlite3.connect(broker_db, timeout=0.2)
+        try:
+            rows = conn.execute(
+                "SELECT DISTINCT worker FROM leases"
+                " WHERE worker IS NOT NULL").fetchall()
+        finally:
+            conn.close()
+    except sqlite3.Error:
+        return set()
+    pids = set()
+    for (name,) in rows:
+        match = re.match(r"worker\.(\d+)-", name or "")
+        if match:
+            pids.add(int(match.group(1)))
+    return pids
 
 
 def _poll_states(store, pks) -> dict:
@@ -201,6 +275,7 @@ def run_scenario(name: str, seed: int = 1,
     broker_stats: dict = {}
     states: dict = {}
     failures: list[str] = []
+    stopped_pid: int | None = None
     try:
         daemon.start()
         store = configure_store(daemon.store_path)
@@ -225,6 +300,12 @@ def run_scenario(name: str, seed: int = 1,
         kill_deadline = t0 + sc.kill_at
         kills_done = False
         armed = sc.chaos is not None
+        stop_deadline = (t0 + sc.sigstop_at
+                         if sc.sigstop_at is not None else None)
+        cont_deadline = (t0 + sc.sigcont_at
+                         if sc.sigcont_at is not None else None)
+        broker_kill_deadline = (t0 + sc.broker_kill_at
+                                if sc.broker_kill_at is not None else None)
 
         deadline = t0 + sc.timeout
         pending = set(pks)
@@ -242,6 +323,35 @@ def run_scenario(name: str, seed: int = 1,
                 live = daemon.worker_pids()
                 if live and pending:
                     os.kill(live[victim % len(live)], signal.SIGKILL)
+            if (stop_deadline is not None and stopped_pid is None
+                    and now >= stop_deadline):
+                # only stop a worker that holds a lease: under load
+                # workers can spawn slowly, and a victim with no
+                # in-flight work has no stale write to fence — defer to
+                # the next tick until one qualifies
+                leased = _leased_worker_pids(daemon.broker_db)
+                victims = [pid for pid in daemon.worker_pids()
+                           if pid in leased]
+                if victims:
+                    # the victim keeps its pid (is_alive() stays True, no
+                    # supervisor restart) — only the broker reaper notices
+                    stopped_pid = victims[0]
+                    os.kill(stopped_pid, signal.SIGSTOP)
+                    if sc.sigcont_at is not None:
+                        # hold the zombie for the scenario's window
+                        # measured from the ACTUAL stop — slow startup
+                        # must not shrink the lease-expiry window
+                        cont_deadline = time.time() + (sc.sigcont_at
+                                                       - sc.sigstop_at)
+            if (cont_deadline is not None and stopped_pid is not None
+                    and now >= cont_deadline):
+                os.kill(stopped_pid, signal.SIGCONT)
+                cont_deadline = None
+            if broker_kill_deadline is not None and now >= broker_kill_deadline:
+                broker_kill_deadline = None
+                proc = daemon._broker_proc
+                if proc is not None and proc.is_alive():
+                    os.kill(proc.pid, signal.SIGKILL)
             if kill_pks and not kills_done and now >= kill_deadline:
                 kills_done = True
                 from repro.engine.controller import ProcessController
@@ -260,6 +370,18 @@ def run_scenario(name: str, seed: int = 1,
             pending = {pk for pk in pks
                        if states.get(pk) not in TERMINAL}
             if not pending:
+                if stopped_pid is not None and cont_deadline is not None:
+                    # the fleet drained before the scheduled wake-up: wake
+                    # the zombie NOW — the scenario's point is what it does
+                    # next (its stale writes must fence), so it needs to be
+                    # running before teardown
+                    os.kill(stopped_pid, signal.SIGCONT)
+                    cont_deadline = None
+                if sc.expect_meta and not all(
+                        int(store.get_meta(key) or 0) >= minimum
+                        for key, minimum in sc.expect_meta.items()):
+                    time.sleep(0.1)  # zombie awake, fence not recorded yet
+                    continue
                 break
             time.sleep(0.25)
 
@@ -272,6 +394,11 @@ def run_scenario(name: str, seed: int = 1,
         except Exception:  # noqa: BLE001 - broker may have been killed
             broker_stats = {}
     finally:
+        if stopped_pid is not None:
+            try:  # never leave a SIGSTOPped child behind
+                os.kill(stopped_pid, signal.SIGCONT)
+            except OSError:
+                pass
         daemon.stop()
         for key, value in saved_env.items():
             if value is None:
@@ -284,11 +411,20 @@ def run_scenario(name: str, seed: int = 1,
     report = check_store(store, expected_pks=pks)
     if sc.expect_restarts and restarts < 1:
         failures.append("expected at least one worker restart; saw none")
+    if sc.expect_broker_restarts and daemon.broker_restarts < 1:
+        failures.append("expected the supervisor to restart the broker; "
+                        "it never did")
     for key, minimum in sc.expect_stats.items():
         if broker_stats.get(key, 0) < minimum:
             failures.append(
                 f"expected broker stat {key} >= {minimum}, "
                 f"got {broker_stats.get(key, 0)}")
+    meta = {key: int(store.get_meta(key) or 0) for key in sc.expect_meta}
+    for key, minimum in sc.expect_meta.items():
+        if meta.get(key, 0) < minimum:
+            failures.append(
+                f"expected store meta {key} >= {minimum}, "
+                f"got {meta.get(key, 0)}")
     if sc.expect_killed:
         killed = [pk for pk in kill_pks if states.get(pk) == "killed"]
         if not killed:
@@ -299,4 +435,5 @@ def run_scenario(name: str, seed: int = 1,
     return ScenarioResult(
         name=name, seed=seed, workdir=workdir, report=report,
         restarts=restarts, broker_stats=broker_stats, states=states,
-        elapsed=time.time() - t0, failures=failures)
+        elapsed=time.time() - t0, failures=failures,
+        broker_restarts=daemon.broker_restarts, meta=meta)

@@ -665,6 +665,36 @@ def cmd_chaos_check(store: ProvenanceStore, args) -> None:
         sys.exit(1)
 
 
+def cmd_store_fsck(store: ProvenanceStore, args) -> None:
+    from repro.provenance.fsck import fsck
+
+    broker_db = args.broker_db
+    if broker_db is None:
+        # daemon convention: broker.db sits next to the profile
+        candidate = os.path.join(
+            os.path.dirname(os.path.abspath(args.profile)), "broker.db")
+        if os.path.exists(candidate):
+            broker_db = candidate
+    report = fsck(store, repair=args.repair, broker_db=broker_db)
+    if args.json:
+        print(json.dumps({
+            "clean": report.clean,
+            "repaired": report.repaired,
+            "counts": report.counts(),
+            "checked": {"processes": report.checked_processes,
+                        "links": report.checked_links,
+                        "blobs": report.checked_blobs},
+            "findings": [{"kind": f.kind, "pk": f.pk, "detail": f.detail,
+                          "action": f.action} for f in report.findings],
+        }, indent=2))
+    else:
+        print(report.summary())
+    # detect-only mode exits non-zero on findings (CI gate); --repair
+    # exits zero when every finding was fixed
+    if report.findings and not args.repair:
+        sys.exit(1)
+
+
 def cmd_cache_invalidate(store: ProvenanceStore, args) -> None:
     from repro.caching.registry import CacheRegistry
 
@@ -806,6 +836,19 @@ def main(argv=None) -> None:
     cc.add_argument("--expect-terminal", action="store_true",
                     help="also require --pk processes to be terminal")
 
+    p_store = sub.add_parser(
+        "store", help="profile maintenance (fsck, repair, blob GC)")
+    store_sub = p_store.add_subparsers(dest="sub", required=True)
+    sf = store_sub.add_parser(
+        "fsck", help="detect (and with --repair, fix) orphaned processes, "
+                     "stale checkpoints, dangling links, unreferenced blobs")
+    sf.add_argument("--repair", action="store_true",
+                    help="fix findings in place instead of just reporting")
+    sf.add_argument("--broker-db", default=None,
+                    help="broker sqlite for live-lease detection + requeue "
+                         "(default: broker.db next to the profile)")
+    sf.add_argument("--json", action="store_true")
+
     args = ap.parse_args(argv)
     store = ProvenanceStore(args.profile)
 
@@ -852,6 +895,8 @@ def main(argv=None) -> None:
         cmd_chaos_points(store, args)
     elif args.cmd == "chaos" and args.sub == "check":
         cmd_chaos_check(store, args)
+    elif args.cmd == "store" and args.sub == "fsck":
+        cmd_store_fsck(store, args)
 
 
 if __name__ == "__main__":

@@ -31,7 +31,7 @@ from repro.observability import trace
 from repro.observability.timeline import (
     STATE_HISTORY_ATTR, TRACE_LEVELNAME, serialize_spans,
 )
-from repro.provenance.store import LinkType, NodeType
+from repro.provenance.store import LinkType, NodeType, StaleEpochError
 
 # The process currently executing in this task — used to attach CALL links
 # for synchronously-nested process functions (paper fig. 2).
@@ -131,6 +131,10 @@ class Process(StateMachine):
         self._pending_update: dict | None = None
         self._ckpt_dirty = False
         self._last_ckpt_json: str | None = None
+        # lease epoch (fencing token): set when this instance was handed
+        # its pk by the broker; every flush/terminal transaction asserts
+        # it against the store so a stale holder cannot write (§III.C)
+        self._epoch: int | None = None
         # per-state dwell times ([state, wall-ts] per transition) — rides
         # the existing attribute writes, no extra commits
         self._state_history: list[list] = []
@@ -289,6 +293,7 @@ class Process(StateMachine):
         # correctness
         chaos.fault_point("process.flush.pre", pk=self.pk)
         with trace.span("checkpoint.flush"), self.store.transaction():
+            self.store.fence_epoch(self.pk, self._epoch)
             if self._pending_update is not None:
                 update, self._pending_update = self._pending_update, None
                 self.store.update_process(self.pk, **update)
@@ -326,6 +331,7 @@ class Process(StateMachine):
             # buffered attributes + checkpoint removal (joins the caller's
             # step transaction when there is one)
             with self.store.transaction():
+                self.store.fence_epoch(self.pk, self._epoch)
                 update, self._pending_update = self._pending_update, None
                 self.store.update_process(self.pk, **update)
                 self.store.delete_checkpoint(self.pk)
@@ -378,8 +384,8 @@ class Process(StateMachine):
         pass
 
     @classmethod
-    def recreate_from_checkpoint(cls, checkpoint: dict, runner=None
-                                 ) -> "Process":
+    def recreate_from_checkpoint(cls, checkpoint: dict, runner=None,
+                                 epoch: int | None = None) -> "Process":
         import importlib
 
         mod_name, _, qual = checkpoint["process_class"].partition(":")
@@ -405,6 +411,7 @@ class Process(StateMachine):
         self._pending_update = None
         self._ckpt_dirty = False
         self._last_ckpt_json = None
+        self._epoch = epoch
         self._timeline = None
         self.pk = checkpoint["pk"]
         self.parent_pk = checkpoint.get("parent_pk")
@@ -579,6 +586,7 @@ class Process(StateMachine):
             # phase 2: commit the clones — one transaction, bulk writes
             out_ports = self.spec().outputs
             with self.store.transaction():
+                self.store.fence_epoch(self.pk, self._epoch)
                 self.store.store_data_many(
                     [clone for _l, _lt, clone in clones])
                 self.store.add_links(
@@ -607,6 +615,8 @@ class Process(StateMachine):
             _metrics.get_registry().counter("cache.hits").inc()
             return ExitCode(hit.exit_status, hit.exit_message or "",
                             "SUCCESS")
+        except StaleEpochError:
+            raise  # fenced: the abandon path owns this, not "recompute"
         except Exception:  # noqa: BLE001 — txn already rolled the clones
             # back (links, nodes, attribute writes); only the in-memory
             # output dict needs clearing before run() starts clean
@@ -631,6 +641,27 @@ class Process(StateMachine):
         except Exception:  # noqa: BLE001 — telemetry must not kill the run
             self.runner.logger.exception(
                 "timeline persistence failed for %d", self.pk)
+
+    def _fenced_abandon(self) -> None:
+        """A store transaction was rejected for carrying a stale lease
+        epoch: this instance is a zombie (its pk was requeued and is now
+        owned — at a higher epoch — by another worker). Abandon cleanly:
+        no node write, no state transition, just bump the durable
+        ``lease.fenced_writes`` counter the chaos judge asserts on and
+        release local waiters. The authoritative run elsewhere produces
+        the one true set of outputs."""
+        self.runner.logger.warning(
+            "process %d fenced at epoch %s: a newer lease holder owns it; "
+            "abandoning without writing", self.pk, self._epoch)
+        try:
+            self.store.incr_meta("lease.fenced_writes")
+        except Exception:  # noqa: BLE001 — bookkeeping must not raise here
+            pass
+        _metrics.get_registry().counter("lease.fenced_writes").inc()
+        self._exit_code = ExitCode(
+            997, "stale lease epoch; another worker owns this process",
+            "FENCED")
+        self._done.set()
 
     async def step_until_terminated(self) -> ExitCode:
         token = CURRENT_PROCESS.set(self)
@@ -683,20 +714,31 @@ class Process(StateMachine):
                     self._persist_timeline()
                     if not self.is_terminated:
                         self.transition_to(ProcessState.FINISHED)
+        except StaleEpochError:
+            # fencing token rejected: another worker holds a newer lease
+            # on this pk. Abandon without writing anything — the new
+            # holder's run is the authoritative one (split-brain safety).
+            self._fenced_abandon()
         except ProcessKilled as exc:
             self._exit_code = ExitCode(998, str(exc), "KILLED")
-            with self.store.transaction():
-                self._persist_timeline()
-                if not self.is_terminated:
-                    self.transition_to(ProcessState.KILLED)
+            try:
+                with self.store.transaction():
+                    self._persist_timeline()
+                    if not self.is_terminated:
+                        self.transition_to(ProcessState.KILLED)
+            except StaleEpochError:
+                self._fenced_abandon()
         except Exception:  # noqa: BLE001 → EXCEPTED, never propagate
             tb = traceback.format_exc()
             self._exit_code = ExitCode(999, "process excepted", "EXCEPTED")
-            with self.store.transaction():
-                self.store.add_log(self.pk, "ERROR", tb)
-                self._persist_timeline()
-                if not self.is_terminated:
-                    self.transition_to(ProcessState.EXCEPTED)
+            try:
+                with self.store.transaction():
+                    self.store.add_log(self.pk, "ERROR", tb)
+                    self._persist_timeline()
+                    if not self.is_terminated:
+                        self.transition_to(ProcessState.EXCEPTED)
+            except StaleEpochError:
+                self._fenced_abandon()
         finally:
             self._unregister_control()
             root.__exit__(None, None, None)

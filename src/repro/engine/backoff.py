@@ -18,7 +18,10 @@ from __future__ import annotations
 import asyncio
 import logging
 import random
-from typing import Awaitable, Callable
+import time
+from typing import Awaitable, Callable, TypeVar
+
+_T = TypeVar("_T")
 
 from repro.observability import metrics as _metrics
 
@@ -66,6 +69,43 @@ async def exponential_backoff_retry(
                 break
             registry.counter("backoff.retries").inc()
             await sleep(rand.uniform(0.0, interval) if jitter else interval)
+            interval *= 2.0
+    registry.counter("backoff.exhausted").inc()
+    raise TransportTaskExhausted(name, max_attempts, last)
+
+
+def retry_sync(
+        fn: Callable[[], _T],
+        *, initial_interval: float = 0.1,
+        max_attempts: int = 5,
+        name: str = "transport-task",
+        non_retryable: tuple[type[BaseException], ...] = (),
+        sleeper: Callable[[float], None] | None = None,
+        jitter: bool = True,
+        rng: random.Random | None = None) -> _T:
+    """Blocking counterpart of :func:`exponential_backoff_retry` for the
+    synchronous clients (CLI control verbs, daemon submitters). Same
+    full-jitter schedule and the same ``backoff.*`` counters, so a broker
+    restart window shows up identically in ``repro stats`` whichever
+    transport crossed it."""
+    sleep = sleeper or time.sleep
+    rand = rng or random
+    interval = initial_interval
+    last: BaseException | None = None
+    registry = _metrics.get_registry()
+    for attempt in range(1, max_attempts + 1):
+        try:
+            return fn()
+        except non_retryable:
+            raise
+        except Exception as exc:  # noqa: BLE001 — that's the point
+            last = exc
+            logger.warning("%s failed (attempt %d/%d): %r", name, attempt,
+                           max_attempts, exc)
+            if attempt == max_attempts:
+                break
+            registry.counter("backoff.retries").inc()
+            sleep(rand.uniform(0.0, interval) if jitter else interval)
             interval *= 2.0
     registry.counter("backoff.exhausted").inc()
     raise TransportTaskExhausted(name, max_attempts, last)

@@ -73,6 +73,12 @@ CREATE TABLE IF NOT EXISTS events (
     body TEXT NOT NULL,
     ts REAL NOT NULL
 );
+CREATE TABLE IF NOT EXISTS leases (
+    pk INTEGER PRIMARY KEY,
+    worker TEXT,                           -- NULL = expired, awaiting regrant
+    epoch INTEGER NOT NULL DEFAULT 1,
+    renewed_at REAL NOT NULL
+);
 """
 
 #: keep at most this many events in the durable broadcast log
@@ -102,6 +108,13 @@ class BrokerServer:
         self._consumers: dict[str, set[str]] = {}      # queue -> client ids
         self._rpc: dict[str, str] = {}                 # identifier -> client id
         self._owners: dict[int, str] = {}              # pk -> owning client id
+        self._names: dict[str, str] = {}               # client id -> worker name
+        # pk -> [worker name | None, epoch]; mirrors the durable `leases`
+        # table. Lease identity is the stable worker *name* (not the
+        # per-connection client id), so a reconnect does not look like a
+        # new owner — the epoch only bumps when a pk is granted to a
+        # *different* worker (the fencing event).
+        self._leases: dict[int, list] = {}
         self._subs: dict[str, set[str]] = {}           # client id -> patterns
         self._prefetch: dict[str, int] = {}            # client id -> HWM
         self._last_beat: dict[str, float] = {}
@@ -121,6 +134,9 @@ class BrokerServer:
             "messages_in": 0, "messages_out": 0, "tasks_enqueued": 0,
             "tasks_delivered": 0, "events_logged": 0, "events_compacted": 0,
             "rpc_cancelled": 0, "heartbeats": 0, "clients_dropped": 0,
+            # fenced-ownership accounting: expired leases (epoch fence
+            # armed) and refused stale re-claims from woken zombies
+            "leases_granted": 0, "leases_expired": 0, "stale_claims": 0,
             # chaos-injected frame mutations (duplicate delivery /
             # dropped broadcasts) — the harness asserts these actually
             # fired instead of trusting the scenario spec
@@ -166,7 +182,30 @@ class BrokerServer:
             self._events_uncommitted = 0
 
     # -- lifecycle -----------------------------------------------------------
+    def _recover(self) -> None:
+        """Rebuild in-memory state from sqlite after a (re)start. Tasks a
+        dead broker had marked inflight are requeued — their consumers'
+        connections died with the old process, so at-least-once semantics
+        demand redelivery. Leases survive verbatim (same worker name ⇒ no
+        epoch bump when its task is redelivered to it) with a fresh
+        renewal stamp so the reaper gives reconnecting workers a full
+        grace window before expiring anything."""
+        conn = self.conn()
+        requeued = conn.execute(
+            "UPDATE tasks SET state='ready', consumer=NULL"
+            " WHERE state='inflight'").rowcount
+        now = time.time()
+        conn.execute("UPDATE leases SET renewed_at=?", (now,))
+        conn.commit()
+        self._leases = {
+            row["pk"]: [row["worker"], row["epoch"]]
+            for row in conn.execute("SELECT pk, worker, epoch FROM leases")}
+        if requeued or self._leases:
+            logger.info("broker recovery: requeued %d inflight task(s), "
+                        "%d lease(s) loaded", requeued, len(self._leases))
+
     async def start(self) -> tuple[str, int]:
+        self._recover()
         self._server = await asyncio.start_server(self._on_client, self.host,
                                                   self.port)
         self.port = self._server.sockets[0].getsockname()[1]
@@ -240,6 +279,21 @@ class BrokerServer:
         # so `process.<pk>` stops resolving until a new worker owns it
         for pk in [p for p, v in self._owners.items() if v == cid]:
             del self._owners[pk]
+        # expire the dead worker's leases (unless the same worker *name*
+        # is still connected under another client id — a reconnect is not
+        # a death). The epoch is NOT bumped here: the fence arms only
+        # when the pk is re-granted to a different worker, so a worker
+        # that merely reconnects keeps writing under its old epoch.
+        name = self._names.pop(cid, None)
+        if name is not None and name not in self._names.values():
+            for pk, lease in self._leases.items():
+                if lease[0] == name:
+                    chaos.fault_point("lease.expire", pk=pk)
+                    lease[0] = None
+                    self.conn().execute(
+                        "UPDATE leases SET worker=NULL, renewed_at=?"
+                        " WHERE pk=?", (time.time(), pk))
+                    self.stats["leases_expired"] += 1
         # fail RPCs whose target just died — callers must not hang forever
         for rid in [r for r, (_, target) in self._pending_rpc.items()
                     if target == cid]:
@@ -309,8 +363,13 @@ class BrokerServer:
             self._prefetch[cid] = max(1, int(msg.get("prefetch", 1)))
             self._deliver(msg["queue"])
         elif kind == "ack":
-            self.conn().execute("DELETE FROM tasks WHERE id=?",
-                                (msg["task_id"],))
+            # consumer guard: only the client a task is inflight to may
+            # settle it — a woken zombie's stale ack must not delete a
+            # row that was requeued (and possibly redelivered) while it
+            # was unresponsive
+            self.conn().execute(
+                "DELETE FROM tasks WHERE id=? AND state='inflight'"
+                " AND consumer=?", (msg["task_id"], cid))
             self._maybe_commit()
             # deliver further work to this consumer
             for queue, members in self._consumers.items():
@@ -318,8 +377,9 @@ class BrokerServer:
                     self._schedule_deliver(queue)
         elif kind == "nack":
             self.conn().execute(
-                "UPDATE tasks SET state='ready', consumer=NULL WHERE id=?",
-                (msg["task_id"],))
+                "UPDATE tasks SET state='ready', consumer=NULL WHERE id=?"
+                " AND state='inflight' AND consumer=?",
+                (msg["task_id"], cid))
             self._maybe_commit()
             self._schedule_deliver(msg["queue"])
         elif kind == "rpc_register":
@@ -327,15 +387,56 @@ class BrokerServer:
         elif kind == "rpc_unregister":
             if self._rpc.get(msg["identifier"]) == cid:
                 del self._rpc[msg["identifier"]]
+        elif kind == "hello":
+            # a worker announces its stable name; lease identity hangs
+            # off this, not the per-connection client id
+            self._names[cid] = str(msg.get("worker", cid))
         elif kind == "own":
             # multiplexed process control: one frame claims many pks; the
-            # directory stays O(workers) instead of O(live processes)
+            # directory stays O(workers) instead of O(live processes).
+            # Claims carry the epoch the worker believes it holds — a
+            # claim older than the lease table's epoch is a zombie
+            # re-asserting ownership it already lost, and is refused.
+            epochs = msg.get("epochs") or {}
+            refused: list[int] = []
             for pk in msg.get("pks", []):
-                self._owners[int(pk)] = cid
+                pk = int(pk)
+                lease = self._leases.get(pk)
+                claimed = epochs.get(str(pk))
+                if (lease is not None and claimed is not None
+                        and int(claimed) < lease[1]):
+                    self.stats["stale_claims"] += 1
+                    refused.append(pk)
+                    continue
+                self._owners[pk] = cid
+                if lease is not None and lease[0] is None:
+                    # expired lease re-claimed by its last valid holder
+                    # (same epoch): restore without bumping the fence
+                    name = self._names.get(cid)
+                    if name is not None:
+                        lease[0] = name
+                        self.conn().execute(
+                            "UPDATE leases SET worker=?, renewed_at=?"
+                            " WHERE pk=?", (name, time.time(), pk))
+                        self._maybe_commit()
+            if refused:
+                logger.warning("refused stale ownership claim for pks %s",
+                               refused)
+                self._send(cid, {"kind": "own_refused", "pks": refused})
         elif kind == "disown":
             for pk in msg.get("pks", []):
-                if self._owners.get(int(pk)) == cid:
-                    del self._owners[int(pk)]
+                pk = int(pk)
+                if self._owners.get(pk) == cid:
+                    del self._owners[pk]
+                # the process reached a terminal state under this worker:
+                # its lease is spent — drop the row so the table tracks
+                # only live ownership
+                lease = self._leases.get(pk)
+                if lease is not None and lease[0] == self._names.get(cid):
+                    del self._leases[pk]
+                    self.conn().execute("DELETE FROM leases WHERE pk=?",
+                                        (pk,))
+                    self._maybe_commit()
         elif kind == "subscribe":
             self._subs.setdefault(cid, set()).update(
                 msg.get("patterns", []))
@@ -414,6 +515,7 @@ class BrokerServer:
                                         "clients": len(self._clients),
                                         "owned_pks": len(self._owners),
                                         "rpc_identifiers": len(self._rpc),
+                                        "leases": len(self._leases),
                                         "event_log_size": n_events,
                                         "queues": queues}})
         elif kind == "events_since":
@@ -611,6 +713,32 @@ class BrokerServer:
                         return out
         return out
 
+    def _grant_lease(self, pk: int, cid: str) -> int:
+        """Grant (or renew) the durable ``(pk, worker, epoch)`` lease at
+        delivery time; returns the epoch the delivery is fenced under.
+        The epoch bumps exactly when the pk moves to a *different* worker
+        than the lease's holder — that bump is what lets the store refuse
+        a write from the previous holder should it turn out to be a
+        still-running zombie rather than a corpse."""
+        name = self._names.get(cid, cid)
+        lease = self._leases.get(pk)
+        if lease is None:
+            lease = self._leases[pk] = [name, 1]
+        elif lease[0] != name:
+            lease[0] = name
+            lease[1] += 1
+        else:
+            return lease[1]
+        self.conn().execute(
+            "INSERT INTO leases (pk, worker, epoch, renewed_at)"
+            " VALUES (?,?,?,?) ON CONFLICT(pk) DO UPDATE SET"
+            " worker=excluded.worker, epoch=excluded.epoch,"
+            " renewed_at=excluded.renewed_at",
+            (pk, name, lease[1], time.time()))
+        self.stats["leases_granted"] += 1
+        self._maybe_commit()
+        return lease[1]
+
     def _deliver(self, queue: str) -> None:
         consumers = sorted(c for c in self._consumers.get(queue, set())
                            if c in self._clients)
@@ -648,8 +776,14 @@ class BrokerServer:
             conn.execute(
                 "UPDATE tasks SET state='inflight', consumer=?, delivered_at=?"
                 " WHERE id=?", (target, now, row["id"]))
+            payload = json.loads(row["payload"])
+            if isinstance(payload, dict) and "pk" in payload:
+                # fenced ownership: the frame carries the lease epoch the
+                # target may write the store under
+                payload["epoch"] = self._grant_lease(int(payload["pk"]),
+                                                     target)
             frame = {"kind": "task", "queue": queue, "task_id": row["id"],
-                     "payload": json.loads(row["payload"])}
+                     "payload": payload}
             self._send(target, frame)
             # chaos: an at-least-once transport may hand the same frame
             # over twice — consumers must dedup on task_id
@@ -663,7 +797,10 @@ class BrokerServer:
 
     # -- liveness ----------------------------------------------------------------------
     async def _reaper(self) -> None:
-        """Requeue tasks of consumers that missed two heartbeats."""
+        """Requeue tasks of consumers that missed two heartbeats, and keep
+        the lease table honest: renew leases whose holder is still
+        beating, expire leases whose holder has vanished (e.g. it was
+        connected to a previous broker incarnation and never came back)."""
         while True:
             await asyncio.sleep(self.heartbeat)
             self._commit_now()
@@ -680,6 +817,38 @@ class BrokerServer:
             if dead:
                 for queue in list(self._consumers):
                     self._deliver(queue)
+            self._sweep_leases()
+
+    def _sweep_leases(self) -> None:
+        live_names = set(self._names.values())
+        now = time.time()
+        renew: list[int] = []
+        for pk, lease in self._leases.items():
+            if lease[0] is None:
+                continue
+            if lease[0] in live_names:
+                renew.append(pk)
+            else:
+                # holder is gone with no connection to observe dying —
+                # after the grace window stamped at recovery, the reaper
+                # is what expires it
+                row = self.conn().execute(
+                    "SELECT renewed_at FROM leases WHERE pk=?",
+                    (pk,)).fetchone()
+                if row is not None and row["renewed_at"] < (
+                        now - 2 * self.heartbeat):
+                    chaos.fault_point("lease.expire", pk=pk)
+                    lease[0] = None
+                    self.conn().execute(
+                        "UPDATE leases SET worker=NULL, renewed_at=?"
+                        " WHERE pk=?", (now, pk))
+                    self.stats["leases_expired"] += 1
+        if renew:
+            self.conn().executemany(
+                "UPDATE leases SET renewed_at=? WHERE pk=?",
+                [(now, pk) for pk in renew])
+        if renew or self._dirty:
+            self._commit_now()
 
 
 class BrokerClient:
@@ -695,9 +864,13 @@ class BrokerClient:
     handler locally and claims the pk via a batched ``own`` message, so
     10k live processes cost the broker one directory entry, not 10k."""
 
-    def __init__(self, host: str, port: int):
+    def __init__(self, host: str, port: int, worker_name: str | None = None):
         self.host = host
         self.port = port
+        #: stable identity for fenced ownership; a daemon worker sets
+        #: this to its `worker.<pid>-<nonce>` id so leases survive
+        #: reconnects (lease identity is the name, not the connection)
+        self.worker_name = worker_name
         self._reader: asyncio.StreamReader | None = None
         self._writer: asyncio.StreamWriter | None = None
         self._rpc_handlers: dict[str, Callable] = {}
@@ -712,6 +885,7 @@ class BrokerClient:
         self._flush_scheduled = False
         self._pending_own: set[int] = set()
         self._pending_disown: set[int] = set()
+        self._pk_epochs: dict[int, int] = {}          # pk -> lease epoch
         self._active_tasks: set[int] = set()
         self._tasks: list[asyncio.Task] = []
         self.heartbeat = 1.0
@@ -719,6 +893,10 @@ class BrokerClient:
     async def connect(self) -> None:
         self._reader, self._writer = await asyncio.open_connection(
             self.host, self.port)
+        if self.worker_name is not None:
+            # announce identity before anything else: ownership claims
+            # and lease grants key off this name
+            self._send({"kind": "hello", "worker": self.worker_name})
         # re-register any existing subscriptions (reconnect path)
         self._pending_disown.clear()
         for identifier in self._rpc_handlers:
@@ -766,8 +944,14 @@ class BrokerClient:
         self._flush_scheduled = False
         frames: list[bytes] = []
         if self._pending_own:
-            frames.append(_encode({"kind": "own",
-                                   "pks": sorted(self._pending_own)}))
+            pks = sorted(self._pending_own)
+            frames.append(_encode({
+                "kind": "own", "pks": pks,
+                # epoch-validated re-claim: the broker refuses claims
+                # whose epoch is older than the lease table's (a zombie
+                # trying to re-assert ownership it already lost)
+                "epochs": {str(pk): self._pk_epochs[pk] for pk in pks
+                           if pk in self._pk_epochs}}))
             self._pending_own.clear()
         if self._pending_disown:
             frames.append(_encode({"kind": "disown",
@@ -792,6 +976,7 @@ class BrokerClient:
         else:
             self._pending_disown.add(pk)
             self._pending_own.discard(pk)
+            self._pk_epochs.pop(pk, None)
         self._schedule_flush()
 
     async def _heartbeat_loop(self) -> None:
@@ -856,6 +1041,16 @@ class BrokerClient:
                         fut.set_exception(KeyError(msg["error"]))
                     else:
                         fut.set_result(msg.get("result"))
+            elif kind == "own_refused":
+                # another worker holds a newer lease on these pks — our
+                # in-memory copies are zombies and will self-fence at
+                # their next store write; stop claiming them
+                _metrics.get_registry().counter(
+                    "broker.own_refused").inc(len(msg.get("pks", [])))
+                for pk in msg.get("pks", []):
+                    self._pk_epochs.pop(int(pk), None)
+                logger.warning("ownership claim refused (stale epoch) for"
+                               " pks %s", msg.get("pks"))
             elif kind == "broadcast":
                 self._dispatch_broadcast(msg)
             elif kind == "broadcast_batch":
@@ -887,6 +1082,12 @@ class BrokerClient:
             _metrics.get_registry().counter("broker.duplicate_frames").inc()
             return
         self._active_tasks.add(task_id)
+        payload = msg["payload"]
+        if isinstance(payload, dict) and "epoch" in payload and \
+                "pk" in payload:
+            # remember the lease epoch this frame was fenced under so a
+            # reconnect re-claims ownership with a validated epoch
+            self._pk_epochs[int(payload["pk"])] = int(payload["epoch"])
         try:
             await handler(msg["payload"])
             # crash seam: the work is done (and durable) but the broker
@@ -1137,18 +1338,37 @@ class SyncBrokerClient:
             self._stash_broadcast(msg)
 
     def _request(self, build_msg, timeout: float) -> Any:
-        """Send a request and await its reply; if the broker reaped this
-        client while it sat idle between calls (2 missed heartbeats),
-        reconnect once and retry — control intents are idempotent."""
-        for attempt in (0, 1):
+        """Send a request and await its reply, reconnecting under a
+        full-jitter backoff schedule (engine/backoff.py) on connection
+        loss — this covers both the broker reaping an idle client (2
+        missed heartbeats) and a broker *restart window*, during which
+        connects are refused until the supervising daemon brings it back.
+        Control intents are idempotent, so the retry is safe."""
+        from repro.engine.backoff import (
+            TransportTaskExhausted, retry_sync,
+        )
+        state = {"fresh": self._sock is not None}
+
+        def attempt():
+            if not state["fresh"]:
+                self._connect()
+                state["fresh"] = True
             rid = str(uuid.uuid4())
             try:
                 self._send(build_msg(rid))
                 return self._await_reply(rid, timeout)
             except ConnectionError:
-                if attempt:
-                    raise
-                self._connect()
+                state["fresh"] = False
+                raise
+
+        try:
+            return retry_sync(attempt, initial_interval=0.2, max_attempts=6,
+                              name="sync-broker-request",
+                              non_retryable=(TimeoutError, KeyError))
+        except TransportTaskExhausted as exc:
+            # callers' error handling predates the backoff wrapper: keep
+            # surfacing the underlying connection failure
+            raise exc.last from exc
 
     def rpc(self, identifier: str, msg: dict, timeout: float = 10.0) -> Any:
         # the broker enforces the deadline server-side (cancelled reply);

@@ -24,7 +24,7 @@ from repro.engine.runner import TERMINAL
 from repro.observability import logs as obs_logs
 from repro.observability import metrics as _metrics
 from repro.observability import trace
-from repro.provenance.store import SUMMARY_COLUMNS
+from repro.provenance.store import SUMMARY_COLUMNS, StaleEpochError
 
 logger = logging.getLogger("repro.engine.daemon")
 
@@ -77,6 +77,21 @@ def make_process_task_handler(runner, store, owned: set | None = None):
                 registry.counter("daemon.duplicate_tasks").inc()
                 return
             chaos.fault_point("daemon.checkpoint.pre", pk=pk)
+            # fence FIRST: record this delivery's lease epoch in the store
+            # before doing any work. From here on, any holder of an older
+            # epoch (a zombie whose lease lapsed and was requeued to us)
+            # has its flush/terminal writes rejected. A delivery that is
+            # itself stale (the pk was re-leased past us while this frame
+            # sat in the socket) self-rejects here and just acks.
+            epoch = payload.get("epoch")
+            if epoch is not None:
+                try:
+                    store.fence_epoch(pk, int(epoch))
+                except StaleEpochError:
+                    registry.counter("daemon.stale_deliveries").inc()
+                    return
+                except KeyError:
+                    raise RuntimeError(f"no node for process {pk}") from None
             checkpoint = store.load_checkpoint(pk)
             if checkpoint is None:
                 node = store.get_node(pk, columns=SUMMARY_COLUMNS)
@@ -84,8 +99,9 @@ def make_process_task_handler(runner, store, owned: set | None = None):
                     return  # duplicate delivery of a finished process
                 raise RuntimeError(f"no checkpoint for process {pk}")
             with trace.span("daemon.resume", pk=pk):
-                process = Process.recreate_from_checkpoint(checkpoint,
-                                                           runner=runner)
+                process = Process.recreate_from_checkpoint(
+                    checkpoint, runner=runner,
+                    epoch=int(epoch) if epoch is not None else None)
             # rematerialized, first step not taken — the canonical
             # kill-9-mid-step window the paper's robustness story covers
             chaos.fault_point("daemon.checkpoint.post", pk=pk)
@@ -133,7 +149,13 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
     store = configure_store(store_path)
 
     async def main() -> None:
-        client = BrokerClient(broker_host, broker_port)
+        # the stable worker NAME is the lease identity: it survives a
+        # reconnect (same worker, new socket), so the broker can tell a
+        # reconnecting holder from a replacement and only bump epochs for
+        # genuine hand-offs
+        worker_id = f"worker.{os.getpid()}-{uuid.uuid4().hex[:6]}"
+        client = BrokerClient(broker_host, broker_port,
+                              worker_name=worker_id)
         await client.connect()
         # REPRO_LIVENESS_INTERVAL shortens the store-recheck fallback that
         # papers over lost terminal broadcasts (chaos partition scenarios)
@@ -146,7 +168,6 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
         # advertise this worker + the pks it owns (control-plane directory);
         # the advert doubles as the worker's metrics publication — `repro
         # stats`/`repro process top` merge these snapshots client-side
-        worker_id = f"worker.{os.getpid()}-{uuid.uuid4().hex[:6]}"
         obs_logs.set_worker_id(worker_id)
         owned: set[int] = set()
         client.add_rpc_subscriber(
@@ -172,16 +193,20 @@ def _worker_main(broker_host: str, broker_port: int, store_path: str,
 
 
 def _broker_main(db_path: str, port_file: str,
-                 heartbeat: float = 1.0) -> None:
+                 heartbeat: float = 1.0, port: int = 0) -> None:
+    """Broker OS process. A non-zero ``port`` pins the listen address —
+    the daemon restarts a crashed broker on the SAME port so connected
+    workers and submitters reconnect without rediscovery; the replacement
+    rebuilds leases/tasks from the broker sqlite (``_recover``)."""
     from repro.engine.broker import BrokerServer
 
     obs_logs.configure()
 
     async def main() -> None:
-        server = BrokerServer(db_path, heartbeat=heartbeat)
-        host, port = await server.start()
+        server = BrokerServer(db_path, port=port, heartbeat=heartbeat)
+        host, bound = await server.start()
         with open(port_file, "w") as fh:
-            json.dump({"host": host, "port": port}, fh)
+            json.dump({"host": host, "port": bound}, fh)
         while True:
             await asyncio.sleep(3600)
 
@@ -215,16 +240,17 @@ class Daemon:
         self._workers: list[mp.Process] = []
         self.host: str | None = None
         self.port: int | None = None
+        self.broker_restarts = 0
         self._submit_client = None
         self.submitter_id = f"daemon-{os.getpid()}"
 
     # -- lifecycle ---------------------------------------------------------------
-    def start(self, timeout: float = 20.0) -> None:
+    def _spawn_broker(self, port: int, timeout: float) -> None:
         if os.path.exists(self.port_file):
             os.unlink(self.port_file)
         self._broker_proc = self._ctx.Process(
             target=_broker_main,
-            args=(self.broker_db, self.port_file, self.heartbeat),
+            args=(self.broker_db, self.port_file, self.heartbeat, port),
             daemon=True)
         self._broker_proc.start()
         t0 = time.time()
@@ -236,6 +262,9 @@ class Daemon:
         with open(self.port_file) as fh:
             info = json.load(fh)
         self.host, self.port = info["host"], info["port"]
+
+    def start(self, timeout: float = 20.0) -> None:
+        self._spawn_broker(0, timeout)
         for i in range(self.n_workers):
             self._spawn_worker()
 
@@ -249,8 +278,23 @@ class Daemon:
         self._workers.append(p)
 
     def supervise(self) -> int:
-        """Restart dead workers (the Circus role). Returns #restarts."""
+        """Restart dead workers AND a dead broker (the Circus role).
+        Returns #restarts (workers + broker). A restarted broker is pinned
+        to the old port, so live workers' reconnect loops find it without
+        rediscovery and re-``own`` their pks with epoch validation."""
         restarts = 0
+        if self._broker_proc is not None and not self._broker_proc.is_alive():
+            logger.warning("broker died (exitcode %s); restarting on "
+                           "port %s", self._broker_proc.exitcode, self.port)
+            chaos.fault_point("broker.restart", port=self.port or 0)
+            self._spawn_broker(self.port or 0, timeout=20.0)
+            # the old submitter socket points at the dead process; drop it
+            # so the next send reconnects (with full-jitter retries)
+            if self._submit_client is not None:
+                self._submit_client.close()
+                self._submit_client = None
+            self.broker_restarts += 1
+            restarts += 1
         for i, p in enumerate(list(self._workers)):
             if not p.is_alive():
                 logger.warning("worker %d died (exitcode %s); restarting",

@@ -144,12 +144,17 @@ class Runner:
         self._processes[process.pk] = handle
         return handle
 
-    def resume_from_checkpoint(self, pk: int) -> ProcessHandle | None:
-        """Recreate a process from its persisted checkpoint and schedule it."""
+    def resume_from_checkpoint(self, pk: int,
+                               epoch: int | None = None
+                               ) -> ProcessHandle | None:
+        """Recreate a process from its persisted checkpoint and schedule
+        it. ``epoch`` (when resuming a broker-delivered task) is the lease
+        fencing token the process stamps on every flush/terminal write."""
         checkpoint = self.store.load_checkpoint(pk)
         if checkpoint is None:
             return None
-        process = Process.recreate_from_checkpoint(checkpoint, runner=self)
+        process = Process.recreate_from_checkpoint(checkpoint, runner=self,
+                                                   epoch=epoch)
         return self._schedule(process)
 
     # -- synchronous driving ---------------------------------------------------------

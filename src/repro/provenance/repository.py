@@ -100,6 +100,19 @@ class BlobRepository:
         except FileNotFoundError:
             raise BlobNotFound(digest) from None
 
+    def delete(self, digest: str) -> bool:
+        """Remove one blob (fsck blob GC). Returns True when it existed.
+        Safe against concurrent putters: content addressing means a racing
+        put of the same digest rewrites identical bytes."""
+        if self._mem is not None:
+            with self._lock:
+                return self._mem.pop(digest, None) is not None
+        try:
+            os.unlink(self._path(digest))
+            return True
+        except FileNotFoundError:
+            return False
+
     def has(self, digest: str) -> bool:
         if self._mem is not None:
             return digest in self._mem

@@ -130,7 +130,23 @@ SUMMARY_COLUMNS = ("pk", "uuid", "node_type", "process_type", "label",
                    "exit_status", "exit_message", "node_hash", "ctime",
                    "mtime")
 
-_NODE_COLUMNS = frozenset(SUMMARY_COLUMNS) | {"payload", "checkpoint"}
+_NODE_COLUMNS = frozenset(SUMMARY_COLUMNS) | {"payload", "checkpoint",
+                                              "lease_epoch"}
+
+
+class StaleEpochError(RuntimeError):
+    """A write arrived bearing a lease epoch older than one the store has
+    already accepted for that pk: the writer is a zombie whose lease
+    expired and whose process was re-granted to another worker. The write
+    is refused (fencing token, Kleppmann-style); the zombie must abandon
+    the process without touching the store."""
+
+    def __init__(self, pk: int, epoch: int):
+        super().__init__(
+            f"stale lease epoch {epoch} for pk={pk}: the store has "
+            "accepted writes from a newer lease holder")
+        self.pk = pk
+        self.epoch = epoch
 
 #: sqlite's default bound-variable limit is 999; stay well under it
 _SQL_CHUNK = 500
@@ -184,6 +200,11 @@ class ProvenanceStore:
         cols = {r[1] for r in conn.execute("PRAGMA table_info(nodes)")}
         if "node_hash" not in cols:
             conn.execute("ALTER TABLE nodes ADD COLUMN node_hash TEXT")
+        if "lease_epoch" not in cols:
+            # fencing-token watermark: the highest lease epoch whose
+            # writes this row has accepted (NULL for data nodes and
+            # processes never driven through the broker)
+            conn.execute("ALTER TABLE nodes ADD COLUMN lease_epoch INTEGER")
         # created here (not in _SCHEMA) so it runs after the column exists
         conn.execute("CREATE INDEX IF NOT EXISTS idx_nodes_hash"
                      " ON nodes(process_type, node_hash)")
@@ -509,6 +530,32 @@ class ProvenanceStore:
                 vals[-2] = json.dumps(merged)
                 self._conn().execute(
                     f"UPDATE nodes SET {', '.join(sets)} WHERE pk=?", vals)
+            self._commit()
+
+    # -- lease fencing (split-brain protection) --------------------------------
+    def fence_epoch(self, pk: int, epoch: int | None) -> None:
+        """Record that writes for ``pk`` now happen under lease ``epoch``,
+        refusing the call with :class:`StaleEpochError` if the store has
+        already accepted a newer epoch. A no-op for ``epoch=None`` (local,
+        broker-less runs pay nothing).
+
+        The check is an UPDATE, not a SELECT: it takes sqlite's write
+        lock, so two workers racing to fence the same pk from different
+        OS processes serialize here and exactly one of them loses.
+        Called inside a ``transaction()`` block it joins that unit of
+        work (a fenced flush rolls back whole); standalone it commits."""
+        if epoch is None:
+            return
+        with self._lock:
+            cur = self._conn().execute(
+                "UPDATE nodes SET lease_epoch=? WHERE pk=?"
+                " AND COALESCE(lease_epoch, 0) <= ?", (epoch, pk, epoch))
+            if cur.rowcount == 0:
+                exists = self._conn().execute(
+                    "SELECT 1 FROM nodes WHERE pk=?", (pk,)).fetchone()
+                if exists is None:
+                    raise KeyError(f"no node with pk={pk}")
+                raise StaleEpochError(pk, epoch)
             self._commit()
 
     # -- store-level counters/metadata (telemetry, e.g. hash collisions) -------

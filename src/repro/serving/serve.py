@@ -61,6 +61,10 @@ def make_decode_step(bundle: ModelBundle) -> Callable:
 # Continuous-batching scheduler (host-side control, one jitted decode step)
 # ---------------------------------------------------------------------------
 
+class QueueFullError(RuntimeError):
+    """submit() rejected: the admission queue is at ``max_pending``."""
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -84,7 +88,8 @@ class BatchScheduler:
     """
 
     def __init__(self, bundle: ModelBundle, params: Any, batch_size: int,
-                 max_len: int, eos_id: int = -1):
+                 max_len: int, eos_id: int = -1,
+                 max_pending: int | None = None):
         if bundle.cfg.family not in LM_FAMILIES:
             raise ValueError(
                 f"BatchScheduler drives KV-cache LM families {LM_FAMILIES}, "
@@ -95,6 +100,12 @@ class BatchScheduler:
         self.batch_size = batch_size
         self.max_len = max_len
         self.eos_id = eos_id
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        #: admission bound: submissions beyond batch-occupancy + this many
+        #: queued requests are rejected (backpressure to the caller)
+        #: instead of growing the FIFO without limit
+        self.max_pending = max_pending
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * batch_size
         self.decode_step = jax.jit(make_decode_step(bundle),
@@ -119,12 +130,20 @@ class BatchScheduler:
         self._g_active = reg.gauge("serving.slots_active")
         self._g_queue = reg.gauge("serving.queue_depth")
         self._h_latency = reg.histogram("serving.request_seconds")
+        self._m_rejected = reg.counter("serving.rejected")
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
         if len(req.prompt) >= self.max_len:
             raise ValueError(f"prompt of {len(req.prompt)} tokens cannot fit "
                              f"a max_len={self.max_len} cache")
+        if (self.max_pending is not None
+                and len(self.queue) >= self.max_pending):
+            self._m_rejected.inc()
+            raise QueueFullError(
+                f"admission queue full: {len(self.queue)} pending "
+                f"(max_pending={self.max_pending}); retry after the batch "
+                "drains or raise max_pending")
         req.submitted_at = time.monotonic()
         self.queue.append(req)
         self._m_submitted.inc()

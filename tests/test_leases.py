@@ -1,0 +1,286 @@
+"""Lease semantics (grant/renew/expire/epoch-bump), store epoch fencing,
+broker crash recovery, and ``repro store fsck`` detection + repair.
+
+Broker-side tests drive :class:`BrokerServer` internals directly (no
+sockets) the way test_chaos.py does; store-side tests run against the
+in-memory fixture. The end-to-end zombie/broker-kill behaviour lives in
+the chaos scenarios (tests/test_chaos.py)."""
+
+import asyncio
+import json
+import sqlite3
+import time
+
+import pytest
+
+from repro.engine.broker import _TASKS_SCHEMA, BrokerServer
+from repro.provenance.store import NodeType, StaleEpochError
+
+
+class _FakeWriter:
+    def __init__(self):
+        self.frames = []
+
+    def is_closing(self):
+        return False
+
+    def write(self, data):
+        self.frames.append(data)
+
+
+def _server(tmp_path):
+    return BrokerServer(str(tmp_path / "broker.db"))
+
+
+# ---------------------------------------------------------------------------
+# lease grant / renew / expire / epoch bump
+# ---------------------------------------------------------------------------
+
+def test_lease_grant_renew_and_handoff_bump(tmp_path):
+    srv = _server(tmp_path)
+    srv._names["c1"] = "wA"
+    srv._names["c2"] = "wB"
+    # first grant creates the lease at epoch 1
+    assert srv._grant_lease(5, "c1") == 1
+    # re-delivery to the SAME worker renews without bumping — a worker
+    # that merely reconnected must not fence its own live coroutine
+    assert srv._grant_lease(5, "c1") == 1
+    assert srv.stats["leases_granted"] == 1
+    # hand-off to a different worker arms the fence
+    assert srv._grant_lease(5, "c2") == 2
+    srv._commit_now()
+    row = srv.conn().execute(
+        "SELECT worker, epoch FROM leases WHERE pk=5").fetchone()
+    assert row["worker"] == "wB" and row["epoch"] == 2
+
+
+def test_drop_client_expires_lease_without_bump(tmp_path):
+    srv = _server(tmp_path)
+    srv._clients["c1"] = _FakeWriter()
+    srv._names["c1"] = "wA"
+    srv._grant_lease(9, "c1")
+
+    srv._drop_client("c1")
+
+    # expired: holder cleared, epoch NOT bumped (the bump happens at the
+    # next grant to a different worker), durable row matches
+    assert srv._leases[9] == [None, 1]
+    assert srv.stats["leases_expired"] == 1
+    row = srv.conn().execute(
+        "SELECT worker, epoch FROM leases WHERE pk=9").fetchone()
+    assert row["worker"] is None and row["epoch"] == 1
+
+
+def test_reconnect_reowns_expired_lease_without_bump(tmp_path):
+    srv = _server(tmp_path)
+    srv._clients["c1"] = _FakeWriter()
+    srv._names["c1"] = "wA"
+    srv._grant_lease(9, "c1")
+    srv._drop_client("c1")
+
+    # the same worker NAME comes back under a fresh connection and
+    # re-owns at the epoch it holds: restored, not refused, not bumped
+    w = _FakeWriter()
+    srv._clients["c2"] = w
+    asyncio.run(srv._handle("c2", {"kind": "hello", "worker": "wA"}))
+    asyncio.run(srv._handle("c2", {"kind": "own", "pks": [9],
+                                   "epochs": {"9": 1}}))
+    assert srv._leases[9] == ["wA", 1]
+    assert srv._owners[9] == "c2"
+    assert not any(b"own_refused" in f for f in w.frames)
+
+
+def test_stale_own_claim_refused(tmp_path):
+    srv = _server(tmp_path)
+    w = _FakeWriter()
+    srv._clients["c1"] = w
+    srv._names["c1"] = "wA"
+    srv._leases[7] = ["wB", 3]  # pk 7 was re-leased to wB at epoch 3
+
+    asyncio.run(srv._handle("c1", {"kind": "own", "pks": [7],
+                                   "epochs": {"7": 1}}))
+
+    # the zombie's claim is refused: no ownership, counted, told why
+    assert 7 not in srv._owners
+    assert srv.stats["stale_claims"] == 1
+    reply = json.loads(w.frames[-1].decode())
+    assert reply["kind"] == "own_refused" and reply["pks"] == [7]
+
+
+def test_zombie_ack_cannot_settle_requeued_task(tmp_path):
+    srv = _server(tmp_path)
+    srv.conn().execute(
+        "INSERT INTO tasks (id, queue, payload, state, consumer,"
+        " created_at) VALUES (1, 'q', '{}', 'inflight', 'c2', 0)")
+    srv._commit_now()
+
+    # c1 (the previous holder) acks a task that is now inflight to c2:
+    # the consumer guard must leave the row untouched
+    asyncio.run(srv._handle("c1", {"kind": "ack", "task_id": 1}))
+    row = srv.conn().execute(
+        "SELECT state, consumer FROM tasks WHERE id=1").fetchone()
+    assert row["state"] == "inflight" and row["consumer"] == "c2"
+
+    # the rightful holder settles it
+    asyncio.run(srv._handle("c2", {"kind": "ack", "task_id": 1}))
+    assert srv.conn().execute(
+        "SELECT COUNT(*) FROM tasks").fetchone()[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# broker crash recovery
+# ---------------------------------------------------------------------------
+
+def test_broker_restart_recovers_leases_and_requeues(tmp_path):
+    db = str(tmp_path / "broker.db")
+    srv1 = BrokerServer(db)
+    srv1._names["c1"] = "wA"
+    assert srv1._grant_lease(3, "c1") == 1
+    srv1.conn().execute(
+        "INSERT INTO tasks (queue, payload, state, consumer, created_at)"
+        " VALUES ('process.queue', ?, 'inflight', 'c1', 0)",
+        (json.dumps({"pk": 3}),))
+    srv1._commit_now()
+    srv1._conn.close()  # the old broker process is gone (kill -9)
+
+    srv2 = BrokerServer(db)
+    srv2._recover()
+    # the lease survives verbatim: same holder name, same epoch — a
+    # reconnecting wA is not fenced by the broker having died
+    assert srv2._leases[3] == ["wA", 1]
+    # the dead broker's inflight task is requeued (its consumer's
+    # connection died with the old process)
+    row = srv2.conn().execute(
+        "SELECT state, consumer FROM tasks").fetchone()
+    assert row["state"] == "ready" and row["consumer"] is None
+    # renewal stamps were refreshed: reconnecting workers get a full
+    # grace window before the reaper may expire anything
+    renewed = srv2.conn().execute(
+        "SELECT renewed_at FROM leases WHERE pk=3").fetchone()[0]
+    assert renewed > time.time() - 5.0
+
+
+# ---------------------------------------------------------------------------
+# store epoch fencing
+# ---------------------------------------------------------------------------
+
+def test_fence_epoch_monotonic(store):
+    pk = store.create_process_node(NodeType.CALC_FUNCTION, "P")
+    store.fence_epoch(pk, None)   # broker-less runs: no-op
+    store.fence_epoch(pk, 2)
+    store.fence_epoch(pk, 2)      # same epoch: still the holder
+    store.fence_epoch(pk, 5)      # monotonic advance
+    with pytest.raises(StaleEpochError) as err:
+        store.fence_epoch(pk, 3)
+    assert err.value.pk == pk and err.value.epoch == 3
+    with pytest.raises(KeyError):
+        store.fence_epoch(999999, 1)
+
+
+def test_stale_fence_rolls_back_whole_transaction(store):
+    pk = store.create_process_node(NodeType.CALC_FUNCTION, "P")
+    store.fence_epoch(pk, 2)
+    # a zombie's unit of work: writes land in the txn, then its fence
+    # assertion fails — EVERYTHING must roll back, not just the fence
+    with pytest.raises(StaleEpochError):
+        with store.transaction():
+            store.update_process(pk, state="running")
+            store.fence_epoch(pk, 1)
+    node = store.get_node(pk)
+    assert node["process_state"] != "running"
+
+
+# ---------------------------------------------------------------------------
+# fsck: detect + repair + idempotence
+# ---------------------------------------------------------------------------
+
+def _broker_db(tmp_path, *, lease_pks=()):
+    db = str(tmp_path / "fsck-broker.db")
+    conn = sqlite3.connect(db)
+    conn.executescript(_TASKS_SCHEMA)
+    for pk in lease_pks:
+        conn.execute(
+            "INSERT INTO leases (pk, worker, epoch, renewed_at)"
+            " VALUES (?, 'w', 1, ?)", (pk, time.time()))
+    conn.commit()
+    conn.close()
+    return db
+
+
+def _task_pks(broker_db):
+    conn = sqlite3.connect(broker_db)
+    try:
+        return sorted(
+            json.loads(row[0])["pk"] for row in conn.execute(
+                "SELECT payload FROM tasks WHERE state='ready'"))
+    finally:
+        conn.close()
+
+
+def test_fsck_detects_and_repairs(store, tmp_path):
+    from repro.chaos.invariants import check_store
+    from repro.provenance.fsck import fsck
+
+    # orphan with a checkpoint -> repair requeues it
+    orphan_ckpt = store.create_process_node(NodeType.CALC_FUNCTION, "A")
+    store.save_checkpoint(orphan_ckpt, {"pk": orphan_ckpt})
+    # orphan without a checkpoint -> repair can only mark it excepted
+    orphan_dead = store.create_process_node(NodeType.CALC_FUNCTION, "B")
+    # held lease -> NOT an orphan, left alone
+    live = store.create_process_node(NodeType.CALC_FUNCTION, "C")
+    store.save_checkpoint(live, {"pk": live})
+    # terminal process still carrying a checkpoint
+    done = store.create_process_node(NodeType.CALC_FUNCTION, "D")
+    store.update_process(done, state="finished", exit_status=0,
+                         attributes={"state_history":
+                                     [["finished", time.time()]]})
+    store.save_checkpoint(done, {"pk": done})
+    # dangling link
+    with store._lock:
+        store._conn().execute(
+            "INSERT INTO links (in_id, out_id, link_type, label)"
+            " VALUES (?, 999999, 'create', 'ghost')", (orphan_dead,))
+        store._conn().commit()
+    # unreferenced blob
+    junk = store.repository.put(b"nobody references these bytes")
+
+    broker_db = _broker_db(tmp_path, lease_pks=(live,))
+
+    # -- detect-only: full census, nothing mutated
+    report = fsck(store, broker_db=broker_db)
+    assert report.counts() == {"orphan": 2, "stale-checkpoint": 1,
+                               "dangling-link": 1, "unreferenced-blob": 1}
+    assert store.repository.has(junk)
+    assert store.load_checkpoint(done) is not None
+
+    # -- repair
+    repaired = fsck(store, repair=True, broker_db=broker_db)
+    assert len(repaired.findings) == 5
+    assert _task_pks(broker_db) == [orphan_ckpt]   # requeued
+    node = store.get_node(orphan_dead)
+    assert node["process_state"] == "excepted"
+    assert node["exit_status"] == 999
+    history = json.loads(node["attributes"])["state_history"]
+    assert history[-1][0] == "excepted"
+    assert store.load_checkpoint(done) is None
+    assert not store.repository.has(junk)
+
+    # -- idempotent: a second repair pass finds nothing (the requeued
+    # orphan now has a pending task row, so it is no longer orphaned)
+    assert fsck(store, repair=True, broker_db=broker_db).clean
+    # and the repaired profile passes the chaos invariant checker
+    assert check_store(store).ok
+
+
+def test_fsck_without_broker_marks_orphans_excepted(store):
+    from repro.provenance.fsck import fsck
+
+    pk = store.create_process_node(NodeType.CALC_FUNCTION, "A")
+    store.save_checkpoint(pk, {"pk": pk})
+    report = fsck(store, repair=True, broker_db=None)
+    assert report.counts() == {"orphan": 1}
+    node = store.get_node(pk)
+    # no broker to requeue into: even a checkpointed orphan goes terminal
+    assert node["process_state"] == "excepted"
+    assert node["checkpoint"] is None
+    assert fsck(store, repair=True, broker_db=None).clean

@@ -120,6 +120,37 @@ def test_oversized_prompt_rejected(lm):
                              max_new_tokens=1))
 
 
+def test_max_pending_rejects_with_counter(lm):
+    from repro.observability.metrics import get_registry
+    from repro.serving.serve import QueueFullError
+
+    bundle, params = lm
+    sched = BatchScheduler(bundle, params, batch_size=1, max_len=16,
+                           max_pending=2)
+    reqs = [Request(rid=i, prompt=[1, 2, 3], max_new_tokens=1)
+            for i in range(3)]
+    sched.submit(reqs[0])
+    sched.submit(reqs[1])
+    rejected = get_registry().counter("serving.rejected")
+    before = rejected.value
+    with pytest.raises(QueueFullError, match="max_pending=2"):
+        sched.submit(reqs[2])
+    assert rejected.value == before + 1
+    # the bound is backpressure, not a death sentence: once the queue
+    # drains the same request is admissible again
+    sched.run()
+    assert reqs[0].done and reqs[1].done
+    sched.submit(reqs[2])
+    assert len(sched.queue) == 1
+
+
+def test_max_pending_validation(lm):
+    bundle, params = lm
+    with pytest.raises(ValueError, match="max_pending"):
+        BatchScheduler(bundle, params, batch_size=1, max_len=16,
+                       max_pending=0)
+
+
 def test_recurrent_family_rejected():
     cfg = reduced_config("recurrentgemma-2b")
     bundle = build(cfg)
